@@ -1,0 +1,51 @@
+"""Shared benchmark fixtures: corpus, workloads, simulator harness."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.profiler import (A10G_LLAMA2_7B, A10G_MISTRAL_7B,
+                                 H800_LLAMA2_70B, H800_MIXTRAL)
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.simulator import RAGSimulator, SimConfig
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+PROFILES = {
+    "mistral-7b": A10G_MISTRAL_7B,
+    "llama2-7b": A10G_LLAMA2_7B,
+    "mixtral-8x7b": H800_MIXTRAL,
+    "llama2-70b": H800_LLAMA2_70B,
+}
+
+
+@functools.lru_cache(maxsize=4)
+def corpus_and_index(n_docs: int = 2000, mean_doc: int = 1000, seed: int = 0):
+    corpus = make_corpus(n_docs, mean_doc_tokens=mean_doc, seed=seed)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=64, nprobe=8, seed=seed)
+    return corpus, idx
+
+
+def workload(corpus, n=300, rate=1.0, zipf=1.0, out_len=1, seed=1, **kw):
+    return make_workload(corpus, n_requests=n, rate=rate, zipf_s=zipf,
+                         output_len_mean=out_len, seed=seed, **kw)
+
+
+def simulate(corpus, idx, wl, **cfg_kw):
+    cfg = SimConfig(profile=cfg_kw.pop("profile", A10G_MISTRAL_7B), **cfg_kw)
+    sim = RAGSimulator(cfg, corpus, idx, wl)
+    m = sim.run()
+    return m, sim
+
+
+BASELINES: Dict[str, dict] = {
+    "ragcache": {},
+    "vllm": dict(gpu_cache_bytes=0, host_cache_bytes=0,
+                 reorder=False, speculative=False),
+    "sglang": dict(host_cache_bytes=0, policy="lru",
+                   reorder=False, speculative=False),
+}

@@ -1,0 +1,48 @@
+"""Paper Fig. 13/14: overall TTFT & throughput — RAGCache vs vLLM vs SGLang
+on MMLU-like (1 output token) and NQ-like (~6 output tokens) workloads,
+Mistral-7B and LLaMA2-7B A10G profiles.
+
+Paper claims: 1.2-4x lower TTFT vs vLLM, 1.1-3.5x vs SGLang;
+1.3-2.1x / 1.2-1.8x higher throughput.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BASELINES, PROFILES, corpus_and_index,
+                               simulate, workload)
+
+RATES = (0.4, 0.8, 1.2)
+
+
+def _sweep(model: str, out_len: int, tag: str):
+    corpus, idx = corpus_and_index()
+    prof = PROFILES[model]
+    rows = []
+    best_vs = {"vllm": 0.0, "sglang": 0.0}
+    for rate in RATES:
+        wl = workload(corpus, n=250, rate=rate, zipf=1.0, out_len=out_len,
+                      seed=7)
+        ttfts = {}
+        for name, kw in BASELINES.items():
+            m, _ = simulate(corpus, idx, wl, profile=prof, **kw)
+            ttfts[name] = m.avg_ttft
+            rows.append((f"{tag}/{model}/{name}/rate{rate}",
+                         m.avg_ttft * 1e6,
+                         f"ttft={m.avg_ttft:.3f}s hit={m.doc_hit_rate:.2f} "
+                         f"thr={m.throughput_rps:.2f}rps"))
+        for b in ("vllm", "sglang"):
+            best_vs[b] = max(best_vs[b], ttfts[b] / ttfts["ragcache"])
+    rows.append((f"{tag}/{model}/claim/ttft_vs_vllm", best_vs["vllm"],
+                 f"paper 1.2-4x got={best_vs['vllm']:.2f}x"))
+    rows.append((f"{tag}/{model}/claim/ttft_vs_sglang", best_vs["sglang"],
+                 f"paper 1.1-3.5x got={best_vs['sglang']:.2f}x"))
+    return rows
+
+
+def run() -> list:
+    rows = []
+    rows += _sweep("mistral-7b", 1, "fig13_mmlu")
+    rows += _sweep("llama2-7b", 1, "fig13_mmlu")
+    rows += _sweep("mistral-7b", 6, "fig14_nq")
+    return rows

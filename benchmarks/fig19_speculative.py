@@ -1,0 +1,42 @@
+"""Paper Fig. 19 + Table 3: dynamic speculative pipelining vs No-DSP across
+vector-search ratios.
+
+Paper claims: up to 1.6x TTFT reduction; 1.5-4.3x less non-overlapping
+vector search time.  The search-ratio sweep trades accuracy for latency by
+probing a fraction of IVF clusters.
+"""
+from __future__ import annotations
+
+from benchmarks.common import corpus_and_index, simulate, workload
+from repro.retrieval.vectordb import IVFIndex
+
+
+def run() -> list:
+    # high-accuracy search regime: nprobe=32 of 64 clusters, scan bandwidth
+    # calibrated so the full search costs ~0.4 s (paper Table 3: 78-446 ms —
+    # their corpus is 0.3M Wikipedia docs at 768-dim; ours is scaled down, so
+    # the analytic bandwidth is scaled to match the paper's search times)
+    corpus, _ = corpus_and_index()
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=64, nprobe=32,
+                   scan_bytes_per_s=3.2e5)
+    rows = []
+    best_ttft, best_ovl = 0.0, 0.0
+    for frac in (0.125, 0.25, 0.5, 1.0):
+        wl = workload(corpus, n=120, rate=0.1, zipf=1.0, seed=23)
+        m = {}
+        for dsp in (True, False):
+            m[dsp], _ = simulate(corpus, idx, wl, speculative=dsp,
+                                 search_fraction=frac, reorder=False)
+            rows.append((f"fig19/ratio{frac}/{'dsp' if dsp else 'nodsp'}",
+                         m[dsp].avg_non_overlap_search * 1e6,
+                         f"nonovl={m[dsp].avg_non_overlap_search * 1000:.1f}ms "
+                         f"ttft={m[dsp].avg_ttft:.3f}s "
+                         f"wasted={m[dsp].wasted_prefills}"))
+        best_ttft = max(best_ttft, m[False].avg_ttft / max(m[True].avg_ttft, 1e-9))
+        best_ovl = max(best_ovl, m[False].avg_non_overlap_search
+                       / max(m[True].avg_non_overlap_search, 1e-9))
+    rows.append(("fig19/claim/ttft_reduction", best_ttft,
+                 f"paper<=1.6x got={best_ttft:.2f}x"))
+    rows.append(("tab3/claim/non_overlap_reduction", best_ovl,
+                 f"paper 1.5-4.3x got={best_ovl:.2f}x"))
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 4: prefill latency — full computation vs cached prefix vs
+cached prefix + host->GPU transmission.
+
+Paper claims: caching cuts prefill up to 11.5x; still 3.9x ahead after the
+PCIe transfer.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PROFILES, Row
+
+
+def run() -> list:
+    rows = []
+    prof = PROFILES["llama2-7b"]   # 0.5 MiB/token: the transfer-heavy case
+    req = 32                        # request tokens (paper setting)
+    best_full_over_hit = 0.0
+    best_full_over_hit_tx = 0.0
+    for p in (128, 512, 1024, 2048, 4096):
+        full = prof.prefill_time(0, p + req)
+        hit = prof.prefill_time(p, req)
+        tx = prof.transfer_time(p * prof.kv_bytes_per_token)
+        rows.append((f"fig4/full_prefill_{p}", full * 1e6, f"s={full:.3f}"))
+        rows.append((f"fig4/cached_prefix_{p}", hit * 1e6,
+                     f"speedup={full / hit:.1f}x"))
+        rows.append((f"fig4/cached_plus_tx_{p}", (hit + tx) * 1e6,
+                     f"speedup={full / (hit + tx):.1f}x"))
+        best_full_over_hit = max(best_full_over_hit, full / hit)
+        best_full_over_hit_tx = max(best_full_over_hit_tx, full / (hit + tx))
+    rows.append(("fig4/claim/max_speedup_no_tx", best_full_over_hit,
+                 f"paper<=11.5x got={best_full_over_hit:.1f}x"))
+    rows.append(("fig4/claim/max_speedup_with_tx", best_full_over_hit_tx,
+                 f"paper<=3.9x got={best_full_over_hit_tx:.1f}x"))
+    return rows

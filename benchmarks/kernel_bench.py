@@ -1,0 +1,52 @@
+"""Kernel-layer bench: Pallas prefix-attention grid/VMEM accounting + CPU
+oracle agreement, and the jnp flash path wall-clock (the actual CPU compute
+path; interpret-mode kernel timing is not meaningful).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+
+def run() -> list:
+    rows = []
+    # VMEM footprint per grid cell for production tile sizes
+    for (bq, bk, hd) in ((128, 128, 128), (256, 512, 128), (128, 128, 256)):
+        vmem = (bq * hd + 2 * bk * hd) * 2 + (bq * hd + 2 * bq) * 4 \
+            + bq * bk * 4
+        rows.append((f"kernel/prefix_attn/tile_q{bq}_k{bk}_hd{hd}",
+                     vmem / 1024,
+                     f"vmem_kib={vmem / 1024:.0f} fits_16MiB="
+                     f"{vmem < 16 * 2**20}"))
+    # correctness spot check (interpret mode)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, KV, Sq, P, hd = 1, 4, 2, 32, 32, 64
+    q = jax.random.normal(k1, (B, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, KV, P + Sq, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, KV, P + Sq, hd), jnp.float32)
+    t0 = time.perf_counter()
+    out = ops.prefix_attention(q, k, v, prefix_len=P, block_q=16, block_k=16,
+                               interpret=True)
+    dt = time.perf_counter() - t0
+    err = float(jnp.abs(
+        out - ref.reference_prefix_attention(q, k, v, prefix_len=P)).max())
+    rows.append(("kernel/prefix_attn/interpret_allclose", dt * 1e6,
+                 f"max_err={err:.1e} ok={err < 1e-4}"))
+    # jnp flash wall clock (CPU execution path used by the tiny engine)
+    qf = q.transpose(0, 2, 1, 3)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    fn = jax.jit(lambda q, k, v: L.flash_attention(q, k, v, q_offset=P))
+    fn(qf, kf, vf).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        fn(qf, kf, vf).block_until_ready()
+    rows.append(("kernel/flash_jnp/cpu_wallclock",
+                 (time.perf_counter() - t0) / 10 * 1e6, "jit path"))
+    return rows

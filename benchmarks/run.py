@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "fig2_prefill_scaling",
+    "fig4_cache_hit",
+    "fig5_retrieval_pattern",
+    "fig13_overall",
+    "fig15_topk",
+    "fig16_large_models",
+    "fig17_policy",
+    "fig18_reorder",
+    "fig19_speculative",
+    "tab4_sched_time",
+    "tpot_topk",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    import importlib
+    wanted = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{str(derived).replace(',', ';')}")
+        print(f"{name}/_total,{(time.time() - t0) * 1e6:.0f},bench wall time",
+              flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

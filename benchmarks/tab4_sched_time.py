@@ -1,0 +1,22 @@
+"""Paper Table 4: scheduling time (tree lookup/update, reorder decisions,
+DSP decisions). Paper claim: < 1 ms per decision at 0.5-2 req/s."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import corpus_and_index, simulate, workload
+
+
+def run() -> list:
+    corpus, idx = corpus_and_index()
+    rows = []
+    for rate in (0.5, 1.0, 2.0):
+        wl = workload(corpus, n=200, rate=rate, zipf=1.0, seed=29)
+        m, sim = simulate(corpus, idx, wl)
+        st = np.asarray(sim.sched_times)
+        mean_us = float(st.mean() * 1e6) if len(st) else 0.0
+        rows.append((f"tab4/rate{rate}/sched_decision", mean_us,
+                     f"mean={mean_us:.0f}us p99="
+                     f"{float(np.percentile(st, 99) * 1e6):.0f}us "
+                     f"paper<1ms ok={mean_us < 1000}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Replacement-policy ablation at paper scale via the discrete-event
+simulator (paper Fig. 17 / Table 2 shape): PGDSF vs GDSF vs LRU vs LFU on an
+A10G + Mistral-7B profile with a drifting Zipf workload.
+
+    PYTHONPATH=src python examples/policy_ablation.py
+"""
+from repro.core.profiler import A10G_MISTRAL_7B
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.simulator import RAGSimulator, SimConfig
+
+corpus = make_corpus(2000, mean_doc_tokens=1000, seed=0)
+index = IVFIndex(corpus.doc_vectors, n_clusters=64, nprobe=8)
+wl = make_workload(corpus, n_requests=300, rate=0.8, zipf_s=1.0,
+                   drift=0.15, seed=2)
+
+print(f"{'policy':>8} {'hit rate':>9} {'avg TTFT':>9} {'p99':>7}")
+for policy in ("pgdsf", "gdsf", "lru", "lfu"):
+    cfg = SimConfig(profile=A10G_MISTRAL_7B, policy=policy,
+                    gpu_cache_bytes=int(0.25 * 2**30),
+                    host_cache_bytes=2 * 2**30,
+                    reorder=False, speculative=False)
+    m = RAGSimulator(cfg, corpus, index, wl).run()
+    print(f"{policy:>8} {m.doc_hit_rate:>9.3f} {m.avg_ttft:>8.3f}s "
+          f"{m.p99_ttft:>6.2f}s")
+print("\n(paper Fig.17: PGDSF highest hit rate, lowest TTFT)")

@@ -1,0 +1,60 @@
+"""Quickstart: the RAGCache knowledge tree + PGDSF in 60 lines.
+
+Builds a tiny model, caches two documents' KV in the tree, and shows that a
+cache-hit prefill (a) skips the document computation and (b) produces the
+exact same logits as the cold path.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core.controller import RAGController
+from repro.core.knowledge_tree import KnowledgeTree
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+from repro.models import model as M
+
+cfg = get_reduced("qwen2-0.5b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+# two "retrieved documents" and a user question (token ids)
+doc1 = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, cfg.vocab_size)
+doc2 = jax.random.randint(jax.random.PRNGKey(2), (1, 24), 0, cfg.vocab_size)
+question = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
+
+# ---- cold request: compute everything, insert doc states into the tree ----
+tree = KnowledgeTree(gpu_capacity=1 << 20, host_capacity=1 << 22,
+                     profiler=CostProfiler.from_profile(A10G_MISTRAL_7B),
+                     bytes_per_token=2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2)
+ctl = RAGController(tree)
+
+plan = ctl.plan([101, 202], [24, 24], question_tokens=8)
+print(f"cold plan: cached={plan.alpha} tokens, to compute={plan.beta}")
+
+_, c1 = M.prefill(cfg, params, {"tokens": doc1})
+_, c12 = M.prefill(cfg, params, {"tokens": doc2}, prefix_cache=c1, prefix_len=24)
+logits_cold, _ = M.prefill(cfg, params, {"tokens": question},
+                           prefix_cache=c12, prefix_len=48)
+payload1 = {"k": c12["k"][:, :, :24], "v": c12["v"][:, :, :24]}
+payload2 = {"k": c12["k"][:, :, 24:48], "v": c12["v"][:, :, 24:48]}
+ctl.commit(plan, [payload1, payload2])
+
+# ---- warm request: same docs -> prefix hit, question-only prefill ----------
+plan2 = ctl.plan([101, 202], [24, 24], question_tokens=8)
+print(f"warm plan: cached={plan2.alpha} tokens, to compute={plan2.beta}")
+assert plan2.alpha == 48 and plan2.beta == 8
+
+prefix = {
+    "k": jnp.concatenate([n.payload_gpu["k"] for n in plan2.hit_nodes], axis=2),
+    "v": jnp.concatenate([n.payload_gpu["v"] for n in plan2.hit_nodes], axis=2),
+}
+logits_warm, _ = M.prefill(cfg, params, {"tokens": question},
+                           prefix_cache=prefix, prefix_len=48)
+ctl.commit(plan2)
+
+err = float(jnp.abs(logits_cold - logits_warm).max())
+print(f"cold-vs-warm logit error: {err:.2e} (exact reuse, no approximation)")
+print(f"doc hit rate so far: {ctl.doc_hit_rate:.0%}")
+assert err < 1e-5
+print("OK")

@@ -1,0 +1,50 @@
+"""End-to-end RAG serving with the real engine: staged IVF retrieval,
+speculative-pipelining decisions, knowledge-tree caching, cache-aware
+reordering, prefix prefill and greedy decode — then an ablation pass that
+re-serves the same workload without the cache to show the TTFT gap.
+
+    PYTHONPATH=src python examples/rag_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import model as M
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.engine import RAGServer
+
+cfg = get_reduced("qwen2-0.5b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+corpus = make_corpus(40, mean_doc_tokens=32, vocab=cfg.vocab_size, seed=0)
+index = IVFIndex(corpus.doc_vectors, n_clusters=8, nprobe=4)
+wl = make_workload(corpus, n_requests=10, rate=100.0, zipf_s=1.3,
+                   question_tokens=8, vocab=cfg.vocab_size, seed=1)
+
+print("== RAGCache serving (PGDSF, reorder, speculative pipelining) ==")
+srv = RAGServer(cfg, params, corpus, index, top_k=2)
+res = srv.serve(wl, max_new_tokens=3)
+hits = [r for r in res if r.alpha > 0]
+print(f"hit rate: {srv.controller.doc_hit_rate:.0%} "
+      f"({len(hits)}/{len(res)} requests had a prefix hit)")
+cold = np.mean([r.prefill_time for r in res if r.alpha == 0])
+warm = np.mean([r.prefill_time for r in hits]) if hits else float("nan")
+print(f"mean prefill: cold={cold * 1000:.0f}ms warm={warm * 1000:.0f}ms "
+      f"({cold / warm:.1f}x)" if hits else "")
+
+print("\n== same workload, cache disabled (vLLM-like baseline) ==")
+base = RAGServer(cfg, params, corpus, index, top_k=2,
+                 gpu_cache_bytes=0, host_cache_bytes=0,
+                 reorder=False, speculative=False)
+res_b = base.serve(wl, max_new_tokens=3)
+print(f"hit rate: {base.controller.doc_hit_rate:.0%}")
+
+# answers must be identical with and without caching
+same = sum(a.tokens == b.tokens for a, b in
+           zip(sorted(res, key=lambda r: r.req_id),
+               sorted(res_b, key=lambda r: r.req_id)))
+print(f"\nidentical answers with/without cache: {same}/{len(res)}")
+assert same == len(res)
+print("OK")

@@ -1,0 +1,69 @@
+"""Architecture registry: one module per assigned architecture (+ paper models).
+
+``get_config(arch_id)`` returns the full production config;
+``get_reduced(arch_id)`` returns the CPU-smoke-test variant of the same family
+(≤2 layers, d_model ≤ 512, ≤4 experts) per the assignment rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCHS = [
+    "xlstm_1p3b",
+    "hymba_1p5b",
+    "phi35_moe_42b",
+    "yi_34b",
+    "gemma3_12b",
+    "internvl2_1b",
+    "musicgen_large",
+    "gemma2_27b",
+    "mixtral_8x7b",
+    "qwen2_0p5b",
+    # paper's own evaluation models
+    "mistral_7b",
+    "llama2_7b",
+    "llama2_70b",
+]
+
+_ALIASES = {
+    "xlstm-1.3b": "xlstm_1p3b",
+    "hymba-1.5b": "hymba_1p5b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "yi-34b": "yi_34b",
+    "gemma3-12b": "gemma3_12b",
+    "internvl2-1b": "internvl2_1b",
+    "musicgen-large": "musicgen_large",
+    "gemma2-27b": "gemma2_27b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "mistral-7b": "mistral_7b",
+    "llama2-7b": "llama2_7b",
+    "llama2-70b": "llama2_70b",
+}
+
+ASSIGNED = [
+    "xlstm-1.3b", "hymba-1.5b", "phi3.5-moe-42b-a6.6b", "yi-34b",
+    "gemma3-12b", "internvl2-1b", "musicgen-large", "gemma2-27b",
+    "mixtral-8x7b", "qwen2-0.5b",
+]
+
+
+def _module(name: str):
+    mod = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).REDUCED
+
+
+def list_configs() -> List[str]:
+    return list(_ARCHS)

@@ -1,0 +1,120 @@
+"""RAG controller (paper Fig. 7): the orchestration logic shared verbatim by
+the real JAX serving engine and the discrete-event simulator.
+
+Given a request's retrieved document sequence it plans the prefix hit
+(promotions + alpha/beta split), and after prefill it commits the newly
+computed document states into the knowledge tree and refreshes PGDSF stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.knowledge_tree import EvictionError, KnowledgeTree, Node
+
+
+@dataclasses.dataclass
+class RequestPlan:
+    doc_ids: Tuple[int, ...]
+    doc_tokens: Tuple[int, ...]      # token count per retrieved doc
+    question_tokens: int
+    hit_nodes: List[Node]            # longest cached prefix (in order)
+    alpha: int                       # cached tokens (prefix docs)
+    beta: int                        # tokens to compute (rest docs + question)
+    promote_bytes: int               # host->GPU bytes for the hit
+    hit_docs: int                    # for the paper's per-doc hit-rate metric
+
+    @property
+    def full_len(self) -> int:
+        return self.alpha + self.beta
+
+
+class RAGController:
+    def __init__(self, tree: KnowledgeTree):
+        self.tree = tree
+        self.total_docs = 0
+        self.total_hit_docs = 0
+
+    # ---- planning ---------------------------------------------------------
+
+    def plan(self, doc_ids: Sequence[int], doc_tokens: Sequence[int],
+             question_tokens: int) -> RequestPlan:
+        hit = self.tree.match_prefix(doc_ids)
+        alpha = sum(n.n_tokens for n in hit)
+        beta = sum(doc_tokens[len(hit):]) + question_tokens
+        promote = sum(n.bytes_ for n in hit if not n.in_gpu)
+        self.total_docs += len(doc_ids)
+        self.total_hit_docs += len(hit)
+        self.tree.stats["hits" if hit else "misses"] += 1
+        return RequestPlan(
+            doc_ids=tuple(doc_ids),
+            doc_tokens=tuple(doc_tokens),
+            question_tokens=question_tokens,
+            hit_nodes=list(hit),
+            alpha=alpha,
+            beta=beta,
+            promote_bytes=promote,
+            hit_docs=len(hit),
+        )
+
+    # ---- execution hooks ----------------------------------------------------
+
+    def promote(self, plan: RequestPlan) -> float:
+        """Pull the hit prefix into GPU; returns transfer seconds."""
+        for n in plan.hit_nodes:
+            n.pinned = True
+        try:
+            return self.tree.ensure_in_gpu(plan.hit_nodes)
+        except EvictionError:
+            # degenerate: cache thrash — drop the hit, full recompute
+            for n in plan.hit_nodes:
+                n.pinned = False
+            plan.hit_nodes, plan.alpha = [], 0
+            plan.beta = sum(plan.doc_tokens) + plan.question_tokens
+            plan.promote_bytes = 0
+            return 0.0
+
+    def commit(self, plan: RequestPlan,
+               payloads: Optional[Sequence[object]] = None,
+               max_docs: Optional[int] = None) -> float:
+        """After prefill: insert newly computed doc nodes (GPU tier), run
+        Alg. 1 UPDATE_NODE for every accessed doc, unpin. Returns swap-out
+        seconds incurred by insert-driven evictions.
+
+        max_docs (paper §8 "Large top-k"): cache only the first ``max_docs``
+        documents of the sequence — permutation explosion makes deep tails
+        unlikely to be reused, so trading tail coverage for cache space
+        raises overall hit rate at large top-k."""
+        tree = self.tree
+        cost = 0.0
+        parent = plan.hit_nodes[-1] if plan.hit_nodes else tree.root
+        pinned = set(plan.hit_nodes)
+        new_nodes: List[Node] = []
+        limit = len(plan.doc_ids) if max_docs is None else min(
+            max_docs, len(plan.doc_ids))
+        for i in range(len(plan.hit_nodes), limit):
+            payload = payloads[i - len(plan.hit_nodes)] if payloads else None
+            try:
+                node, c = tree.insert(parent, plan.doc_ids[i],
+                                      plan.doc_tokens[i], payload,
+                                      pinned=pinned | set(new_nodes))
+            except EvictionError:
+                break  # cache too small for this path — skip the tail
+            cost += c
+            new_nodes.append(node)
+            parent = node
+        # Alg. 1 stat updates: every accessed doc node
+        for n in plan.hit_nodes:
+            tree.update_on_access(n, True, plan.alpha, plan.beta)
+        for n in new_nodes:
+            tree.update_on_access(n, False, plan.alpha, plan.beta)
+        for n in plan.hit_nodes:
+            n.pinned = False
+        return cost
+
+    # ---- metrics ------------------------------------------------------------
+
+    @property
+    def doc_hit_rate(self) -> float:
+        """Paper §7.3: hit documents / retrieved documents."""
+        return self.total_hit_docs / max(self.total_docs, 1)

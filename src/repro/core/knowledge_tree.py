@@ -1,0 +1,352 @@
+"""The knowledge tree (paper §5.1): a prefix tree over *document ID
+sequences* whose nodes hold the intermediate states (KV tensors / SSM states)
+of one document conditioned on its path prefix, placed in a two-tier
+GPU/host hierarchy with PGDSF replacement (Algorithm 1).
+
+Tier invariant: if a node is in GPU, its parent is in GPU; if in host, its
+parent is in GPU or host ("parents before children in the faster tier").
+Eviction therefore only ever removes tier-leaves, and the tree hierarchy
+mirrors the memory hierarchy (paper Fig. 8).
+
+Payloads are opaque handles managed by a ``CacheBackend`` (real JAX arrays in
+the serving engine, byte counters in the simulator) so the identical policy
+code drives both execution modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.core.profiler import CostProfiler
+
+
+# --------------------------------------------------------------------------
+# replacement policies (PGDSF + ablation baselines, paper §7.3)
+# --------------------------------------------------------------------------
+
+class Policy:
+    """Maps node stats -> eviction priority (lower evicts first)."""
+    name = "base"
+
+    def priority(self, node: "Node", clock: float) -> float:
+        raise NotImplementedError
+
+
+class PGDSF(Policy):
+    """Priority = Clock + Frequency × AvgCost (per-non-cached-token cost from
+    the bilinear profiler — Alg. 1 line 13). Prefix-aware via AvgCost."""
+    name = "pgdsf"
+
+    def priority(self, node: "Node", clock: float) -> float:
+        return clock + node.frequency * node.avg_cost
+
+
+class GDSF(Policy):
+    """Classic GDSF with cost ∝ size (paper's ablation setting): Clock +
+    Frequency × Cost/Size = Clock + Frequency × const."""
+    name = "gdsf"
+
+    def priority(self, node: "Node", clock: float) -> float:
+        return clock + node.frequency * 1.0
+
+
+class LRU(Policy):
+    name = "lru"
+
+    def priority(self, node: "Node", clock: float) -> float:
+        return node.last_access
+
+
+class LFU(Policy):
+    name = "lfu"
+
+    def priority(self, node: "Node", clock: float) -> float:
+        return float(node.frequency)
+
+
+POLICIES = {p.name: p for p in (PGDSF(), GDSF(), LRU(), LFU())}
+
+
+# --------------------------------------------------------------------------
+# backend protocol
+# --------------------------------------------------------------------------
+
+class CacheBackend:
+    """Moves/free payloads between tiers; returns the seconds each move costs
+    (simulated or measured). Default: pure accounting with zero cost."""
+
+    def swap_out(self, node: "Node") -> float:   # GPU -> host copy
+        node.payload_host = node.payload_gpu
+        return 0.0
+
+    def load(self, node: "Node") -> float:       # host -> GPU copy
+        node.payload_gpu = node.payload_host
+        return 0.0
+
+    def free_gpu(self, node: "Node") -> None:
+        node.payload_gpu = None
+
+    def free_host(self, node: "Node") -> None:
+        node.payload_host = None
+
+
+@dataclasses.dataclass
+class Node:
+    doc_id: Optional[int]
+    parent: Optional["Node"]
+    n_tokens: int = 0
+    bytes_: int = 0
+    children: Dict[int, "Node"] = dataclasses.field(default_factory=dict)
+
+    # PGDSF stats (Alg. 1)
+    frequency: int = 0
+    total_cost: float = 0.0
+    num_computed: int = 0
+    avg_cost: float = 0.0
+    priority: float = 0.0
+    last_access: float = 0.0
+
+    in_gpu: bool = False
+    in_host: bool = False
+    swapped_once: bool = False
+    pinned: bool = False            # in active use by a running request
+
+    payload_gpu: object = None
+    payload_host: object = None
+
+    @property
+    def cached(self) -> bool:
+        return self.in_gpu or self.in_host
+
+    def path(self) -> Tuple[int, ...]:
+        ids: List[int] = []
+        n: Optional[Node] = self
+        while n is not None and n.doc_id is not None:
+            ids.append(n.doc_id)
+            n = n.parent
+        return tuple(reversed(ids))
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+class EvictionError(RuntimeError):
+    pass
+
+
+class KnowledgeTree:
+    def __init__(
+        self,
+        gpu_capacity: int,
+        host_capacity: int,
+        *,
+        policy: Policy | str = "pgdsf",
+        profiler: Optional[CostProfiler] = None,
+        backend: Optional[CacheBackend] = None,
+        bytes_per_token: int = 1,
+    ):
+        self.root = Node(doc_id=None, parent=None, pinned=True)
+        self.root.in_gpu = True     # shared system prompt lives in GPU
+        self.gpu_capacity = gpu_capacity
+        self.host_capacity = host_capacity
+        self.gpu_used = 0
+        self.host_used = 0
+        self.gpu_clock = 0.0
+        self.host_clock = 0.0
+        self.policy = POLICIES[policy] if isinstance(policy, str) else policy
+        self.profiler = profiler
+        self.backend = backend or CacheBackend()
+        self.bytes_per_token = bytes_per_token
+        self._access_counter = itertools.count()
+        # counters for benchmarks
+        self.stats = {
+            "hits": 0, "misses": 0, "gpu_evictions": 0, "host_evictions": 0,
+            "swap_out_bytes": 0, "load_bytes": 0, "swap_out_skipped": 0,
+        }
+
+    # ---- lookup ----------------------------------------------------------
+
+    def match_prefix(self, doc_ids: Sequence[int]) -> List[Node]:
+        """Longest cached prefix of ``doc_ids`` (paper: O(h) traversal that
+        stops at the first non-cached child). Returns matched nodes in order."""
+        out: List[Node] = []
+        cur = self.root
+        for d in doc_ids:
+            nxt = cur.children.get(d)
+            if nxt is None or not nxt.cached:
+                break
+            out.append(nxt)
+            cur = nxt
+        return out
+
+    # ---- Alg. 1: UPDATE_NODE --------------------------------------------
+
+    def update_on_access(self, node: Node, is_cached: bool,
+                         alpha: int, beta: int) -> None:
+        node.frequency += 1
+        node.last_access = float(next(self._access_counter))
+        # cost is profiled from requests that computed the node (Eq. 3); a
+        # node that has only ever been hit still needs *a* cost estimate so
+        # its PGDSF priority reflects its recompute value.
+        if (not is_cached or node.num_computed == 0) and beta > 0:
+            if self.profiler is not None:
+                t = self.profiler.estimate(alpha, beta)
+            else:
+                t = float(beta)  # unit cost fallback
+            node.total_cost += t / beta
+            node.num_computed += 1
+            node.avg_cost = node.total_cost / node.num_computed
+        clock = self.gpu_clock if node.in_gpu else self.host_clock
+        node.priority = self.policy.priority(node, clock)
+
+    # ---- eviction (Alg. 1 EVICT_IN_GPU + swap-out-only-once) -------------
+
+    def _tier_leaves(self, tier: str, pinned: Set[Node]) -> List[Node]:
+        """Nodes in `tier` with no child in the same-or-faster tier."""
+        out = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is self.root or n in pinned or n.pinned:
+                continue
+            if tier == "gpu" and n.in_gpu:
+                if not any(c.in_gpu for c in n.children.values()):
+                    out.append(n)
+            elif tier == "host" and n.in_host and not n.in_gpu:
+                if not any(c.cached for c in n.children.values()):
+                    out.append(n)
+        return out
+
+    def evict_gpu(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
+        """Free >= required bytes of GPU tier. Returns transfer seconds spent
+        on swap-outs. Raises EvictionError if impossible (all pinned)."""
+        pinned = pinned or set()
+        cost = 0.0
+        freed = 0
+        while self.gpu_used + required > self.gpu_capacity:
+            leaves = self._tier_leaves("gpu", pinned)
+            if not leaves:
+                raise EvictionError("GPU cache thrash: all nodes pinned")
+            victim = min(leaves, key=lambda n: n.priority)
+            self.gpu_clock = max(self.gpu_clock, victim.priority)
+            cost += self._demote(victim)
+            freed += victim.bytes_
+            self.stats["gpu_evictions"] += 1
+        return cost
+
+    def _demote(self, node: Node) -> float:
+        """GPU -> host (first time: copy; afterwards: free, zero copy)."""
+        cost = 0.0
+        if not node.swapped_once and self.host_capacity > 0:
+            cost += self.evict_host(node.bytes_)
+            if self.host_used + node.bytes_ <= self.host_capacity:
+                cost += self.backend.swap_out(node)
+                node.in_host = True
+                node.swapped_once = True
+                self.host_used += node.bytes_
+                self.stats["swap_out_bytes"] += node.bytes_
+        elif node.swapped_once:
+            self.stats["swap_out_skipped"] += 1
+        self.backend.free_gpu(node)
+        node.in_gpu = False
+        self.gpu_used -= node.bytes_
+        # re-key priority against the host clock for its new tier
+        if node.in_host:
+            node.priority = self.policy.priority(node, self.host_clock)
+        return cost
+
+    def evict_host(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
+        pinned = pinned or set()
+        while self.host_used + required > self.host_capacity:
+            leaves = self._tier_leaves("host", pinned)
+            if not leaves:
+                return 0.0  # can't make room; caller will skip host copy
+            victim = min(leaves, key=lambda n: n.priority)
+            self.host_clock = max(self.host_clock, victim.priority)
+            self.backend.free_host(victim)
+            victim.in_host = False
+            victim.swapped_once = False
+            self.host_used -= victim.bytes_
+            self.stats["host_evictions"] += 1
+            self._maybe_prune(victim)
+        return 0.0
+
+    def _maybe_prune(self, node: Node) -> None:
+        """Drop fully-uncached leaf subtrees to bound metadata growth (keeps
+        frequency stats for cached/again-reachable nodes only)."""
+        while (node is not None and node is not self.root and not node.cached
+               and not node.children and node.parent is not None):
+            parent = node.parent
+            parent.children.pop(node.doc_id, None)
+            node = parent
+
+    # ---- insertion / promotion ------------------------------------------
+
+    def insert(self, parent: Node, doc_id: int, n_tokens: int,
+               payload=None, pinned: Optional[Set[Node]] = None) -> Tuple[Node, float]:
+        """Create (or revive) child node in GPU tier. Returns (node, seconds)."""
+        node = parent.children.get(doc_id)
+        if node is None:
+            node = Node(doc_id=doc_id, parent=parent, n_tokens=n_tokens,
+                        bytes_=n_tokens * self.bytes_per_token)
+            parent.children[doc_id] = node
+        cost = 0.0
+        if not node.in_gpu:
+            cost += self.evict_gpu(node.bytes_, pinned)
+            if self.gpu_used + node.bytes_ > self.gpu_capacity:
+                raise EvictionError("node larger than GPU cache")
+            node.payload_gpu = payload
+            node.in_gpu = True
+            self.gpu_used += node.bytes_
+        else:
+            node.payload_gpu = payload if payload is not None else node.payload_gpu
+        return node, cost
+
+    def ensure_in_gpu(self, nodes: Sequence[Node]) -> float:
+        """Promote a matched prefix path into GPU (host hits pay the PCIe
+        transfer — the paper's 'cache hit latency' component)."""
+        cost = 0.0
+        pinned = set(nodes)
+        for n in nodes:
+            if n.in_gpu:
+                continue
+            cost += self.evict_gpu(n.bytes_, pinned)
+            if self.gpu_used + n.bytes_ > self.gpu_capacity:
+                raise EvictionError("promotion does not fit GPU cache")
+            cost += self.backend.load(n)
+            n.in_gpu = True
+            self.gpu_used += n.bytes_
+            self.stats["load_bytes"] += n.bytes_
+            n.priority = self.policy.priority(n, self.gpu_clock)
+        return cost
+
+    # ---- introspection ----------------------------------------------------
+
+    def nodes(self) -> Iterable[Node]:
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                yield n
+
+    def check_invariants(self) -> None:
+        gpu_b = host_b = 0
+        for n in self.nodes():
+            if n.in_gpu:
+                gpu_b += n.bytes_
+                p = n.parent
+                assert p is self.root or p.in_gpu, "GPU node with non-GPU parent"
+            if n.in_host:
+                host_b += n.bytes_
+                p = n.parent
+                assert p is self.root or p.cached, "host node with free parent"
+        assert gpu_b == self.gpu_used, (gpu_b, self.gpu_used)
+        assert host_b == self.host_used, (host_b, self.host_used)
+        assert self.gpu_used <= self.gpu_capacity
+        assert self.host_used <= self.host_capacity

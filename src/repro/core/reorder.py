@@ -1,0 +1,71 @@
+"""Cache-aware request reordering (paper §5.2).
+
+OrderPriority = CachedLength / ComputationLength — serve requests whose hit
+prefix is large relative to the compute they still need; a starvation window
+guarantees any request is scheduled after at most ``window`` pops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Generic, List, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass
+class _Entry(Generic[T]):
+    item: T
+    cached_len: int
+    compute_len: int
+    seq: int
+    skipped: int = 0
+
+    @property
+    def order_priority(self) -> float:
+        return self.cached_len / max(self.compute_len, 1)
+
+
+class ReorderQueue(Generic[T]):
+    def __init__(self, window: int = 32, enabled: bool = True):
+        self.window = window
+        self.enabled = enabled
+        self._entries: List[_Entry[T]] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def push(self, item: T, cached_len: int, compute_len: int) -> None:
+        self._entries.append(
+            _Entry(item, cached_len, compute_len, next(self._seq))
+        )
+
+    def refresh(self, fn: Callable[[T], tuple]) -> None:
+        """Re-evaluate (cached_len, compute_len) — hit lengths change as the
+        tree evolves between arrival and scheduling."""
+        for e in self._entries:
+            e.cached_len, e.compute_len = fn(e.item)
+
+    def pop(self) -> Optional[T]:
+        if not self._entries:
+            return None
+        if not self.enabled:
+            best = min(self._entries, key=lambda e: e.seq)
+        else:
+            # starvation guard: anything skipped >= window times goes first
+            starved = [e for e in self._entries if e.skipped >= self.window]
+            if starved:
+                best = min(starved, key=lambda e: e.seq)
+            else:
+                best = max(
+                    self._entries,
+                    key=lambda e: (e.order_priority, -e.seq),
+                )
+        self._entries.remove(best)
+        for e in self._entries:
+            e.skipped += 1
+        return best.item
+
+    def peek_all(self) -> List[T]:
+        return [e.item for e in self._entries]

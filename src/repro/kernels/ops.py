@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU runtime these dispatch to the compiled kernels; on CPU (this
+container) they run in interpret mode, which executes the kernel body in
+Python and validates the BlockSpec/grid logic bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import prefix_attention as _pa
+from repro.kernels import paged_attention as _pg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("prefix_len", "window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def prefix_attention(q, k, v, *, prefix_len: int, window: int = 0,
+                     block_q: int = 128, block_k: int = 128,
+                     interpret: bool | None = None):
+    """Flash prefill over [cached prefix ‖ new] KV. Layouts:
+    q: (B, H, Sq, hd); k/v: (B, KV, prefix_len + Sq, hd)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _pa.prefix_attention(q, k, v, prefix_len=prefix_len,
+                                window=window, block_q=block_q,
+                                block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    *, interpret: bool | None = None):
+    """Decode attention over paged KV. q: (B, H, hd)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _pg.paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=interp)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: paged decode attention.
+
+vLLM's PagedAttention reads KV from non-contiguous pages via per-SM gathers;
+the TPU-native adaptation (DESIGN.md §3) prefetches the block table into
+SMEM (``PrefetchScalarGridSpec``) so the page index feeds the BlockSpec
+index_map, and the DMA engine streams one (page x hd) KV tile HBM->VMEM per
+grid step while the VPU/MXU consumes the previous one.
+
+grid = (batch, head, n_page_slots); online-softmax accumulator in VMEM
+scratch, finalized at the last page slot.  Pages past ``lengths[b]`` are
+masked (and their DMA is index-clamped to page 0 — harmless, masked out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page: int, n_slots: int, scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (1, hd) — one token
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (page, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ib * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(pos < lengths_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ib == n_slots - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,              # (B, H, hd) — one decode token per sequence
+    k_pages: jax.Array,        # (n_pages, page, KV, hd)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_slots) int32 page ids
+    lengths: jax.Array,        # (B,) valid token counts
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    n_pages, page, KV, _ = k_pages.shape
+    R = H // KV
+    n_slots = block_tables.shape[1]
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_kernel, page=page, n_slots=n_slots,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # block_tables, lengths
+        grid=(B, H, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, ib, tables, lengths: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, h, ib, tables, lengths:
+                         (tables[b, ib], 0, h // R, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, h, ib, tables, lengths:
+                         (tables[b, ib], 0, h // R, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda b, h, ib, tables, lengths: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q[:, :, None], k_pages, v_pages)
+    return out[:, :, 0]

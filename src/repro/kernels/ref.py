@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_prefix_attention(q, k, v, *, prefix_len: int, window: int = 0):
+    """q: (B, H, Sq, hd); k/v: (B, KV, Skv, hd) with Skv = prefix_len + Sq."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    R = H // KV
+    kf = jnp.repeat(k, R, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, R, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * hd ** -0.5
+    q_pos = prefix_len + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def reference_paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    """q: (B, H, hd); k/v_pages: (n_pages, page, KV, hd);
+    block_tables: (B, n_blocks_max) int32; lengths: (B,) valid tokens."""
+    B, H, hd = q.shape
+    n_pages, page, KV, _ = k_pages.shape
+    R = H // KV
+    nb = block_tables.shape[1]
+    # gather per-request contiguous KV
+    k = k_pages[block_tables]            # (B, nb, page, KV, hd)
+    v = v_pages[block_tables]
+    k = k.reshape(B, nb * page, KV, hd)
+    v = v.reshape(B, nb * page, KV, hd)
+    kf = jnp.repeat(k, R, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, R, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kf) * hd ** -0.5
+    mask = jnp.arange(nb * page)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vf).astype(q.dtype)

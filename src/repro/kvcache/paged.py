@@ -1,0 +1,141 @@
+"""Paged KV block pool (vLLM-style, paper §2/§5.1: "RAGCache stores the
+key-value tensors in non-contiguous memory blocks").
+
+The pool owns a big (n_blocks, block_size, ...) buffer per tier; documents
+hold block-id lists.  Ref-counting lets overlapping knowledge-tree paths
+share blocks.  ``gather``/``scatter`` convert between paged storage and the
+contiguous (B, S, KV, hd) layout the model functions consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+except Exception:                                    # pragma: no cover
+    jax = None
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+class BlockPool:
+    """Fixed-capacity block allocator with refcounts."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._ref = np.zeros(n_blocks, np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n}, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._ref[b] = 1
+        return out
+
+    def incref(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert self._ref[b] > 0
+            self._ref[b] += 1
+
+    def decref(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert self._ref[b] > 0, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+
+    def check(self) -> None:
+        live = int((self._ref > 0).sum())
+        assert live + len(self._free) == self.n_blocks
+        assert len(set(self._free)) == len(self._free)
+
+
+class PagedKVStore:
+    """Paged storage for per-document KV segments.
+
+    Layout: k/v buffers of shape (L, n_blocks, block_size, KV, hd).  A stored
+    segment is (block_ids, n_tokens).  numpy backing doubles as the host tier;
+    jnp backing is the device tier.
+    """
+
+    def __init__(self, n_layers: int, n_blocks: int, block_size: int,
+                 n_kv: int, head_dim: int, dtype=np.float32, device: bool = False):
+        self.pool = BlockPool(n_blocks, block_size)
+        self.block_size = block_size
+        shape = (n_layers, n_blocks, block_size, n_kv, head_dim)
+        self.device = device and jax is not None
+        if self.device:
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
+        else:
+            self.k = np.zeros(shape, dtype)
+            self.v = np.zeros(shape, dtype)
+
+    def bytes_per_token(self) -> int:
+        L, _, _, KV, hd = self.k.shape
+        return int(2 * L * KV * hd * self.k.dtype.itemsize)
+
+    def put(self, k_seg, v_seg) -> "PagedSegment":
+        """k_seg/v_seg: (L, 1, T, KV, hd) contiguous -> paged blocks."""
+        T = k_seg.shape[2]
+        nb = self.pool.blocks_for_tokens(T)
+        blocks = self.pool.alloc(nb)
+        pad = nb * self.block_size - T
+        if self.device:
+            ks = jnp.pad(k_seg[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(v_seg[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ks = ks.reshape(ks.shape[0], nb, self.block_size, *ks.shape[2:])
+            vs = vs.reshape(vs.shape[0], nb, self.block_size, *vs.shape[2:])
+            idx = jnp.asarray(blocks)
+            self.k = self.k.at[:, idx].set(ks.astype(self.k.dtype))
+            self.v = self.v.at[:, idx].set(vs.astype(self.v.dtype))
+        else:
+            k_seg = np.asarray(k_seg)
+            v_seg = np.asarray(v_seg)
+            for bi, b in enumerate(blocks):
+                lo = bi * self.block_size
+                hi = min(lo + self.block_size, T)
+                self.k[:, b, : hi - lo] = k_seg[:, 0, lo:hi]
+                self.v[:, b, : hi - lo] = v_seg[:, 0, lo:hi]
+        return PagedSegment(self, blocks, T)
+
+    def gather(self, seg: "PagedSegment"):
+        """Paged -> contiguous (L, 1, T, KV, hd)."""
+        idx = (jnp.asarray(seg.blocks) if self.device
+               else np.asarray(seg.blocks, np.int64))
+        k = self.k[:, idx]        # (L, nb, bs, KV, hd)
+        v = self.v[:, idx]
+        L, nb, bs, KV, hd = k.shape
+        k = k.reshape(L, nb * bs, KV, hd)[:, : seg.n_tokens]
+        v = v.reshape(L, nb * bs, KV, hd)[:, : seg.n_tokens]
+        return k[:, None], v[:, None]
+
+    def free(self, seg: "PagedSegment") -> None:
+        self.pool.decref(seg.blocks)
+
+
+@dataclasses.dataclass
+class PagedSegment:
+    store: PagedKVStore
+    blocks: List[int]
+    n_tokens: int
+
+    @property
+    def n_bytes(self) -> int:
+        return len(self.blocks) * self.store.block_size * self.store.bytes_per_token()

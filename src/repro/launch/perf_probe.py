@@ -1,0 +1,61 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf probe: compile one (arch x shape) and print the top collective ops
+(trip-count weighted) — the §Perf hypothesis-forming tool.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch yi-34b \
+        --shape prefill_32k [--opt attn-fallback] [--opt moe-capacity]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import sharding as SH
+from repro.launch.hlo_analysis import analyze, top_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--opt", action="append", default=[])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if "moe-capacity" in args.opt:
+        cfg = dataclasses.replace(cfg, moe_impl="capacity")
+    if "attn-fallback" in args.opt:
+        SH.ATTN_REPLICATE_IF_RAGGED = True
+    if "flat-gqa" in args.opt:
+        from repro.models import layers as _L2
+        _L2.FLAT_GQA = True
+    if "seq-par" in args.opt:
+        from repro.models import layers as _L
+        _L.SEQ_PARALLEL_AXIS = "model"
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    with mesh:
+        fn, specs, donate, out_sh = input_specs(cfg, args.shape, mesh)
+        compiled = jax.jit(fn, donate_argnums=donate,
+                           out_shardings=out_sh).lower(*specs).compile()
+    txt = compiled.as_text()
+    t = analyze(txt)
+    print(f"flops/chip={t.flops:.3e}  dot_bytes={t.dot_bytes:.3e}  "
+          f"coll_total={sum(t.coll.values()):.3e}")
+    for k, v in t.coll.items():
+        print(f"  {k:20s} {v:.3e}")
+    print(f"peak={compiled.memory_analysis().peak_memory_in_bytes / 2**30:.2f} GiB")
+    print("--- top collective ops (bytes x trips) ---")
+    for nb, kind, meta in top_collectives(txt, args.top):
+        print(f"{nb:12.3e}  {kind:18s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for the dry-run.
+
+Every model input is a ShapeDtypeStruct with a NamedSharding attached —
+weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as SH
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training import optimizer as OPT
+
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    dict(kind="train",  seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k":  dict(kind="decode", seq=32_768,  batch=128),
+    "long_500k":   dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic/bounded-KV archs (DESIGN.md §4):
+    SSM/hybrid (O(1)/windowed state) and dense archs with sliding windows."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    return cfg.sliding_window > 0
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not supports_long_context(cfg):
+        return False, ("pure full-attention arch: 500k decode skipped per "
+                       "assignment rule (DESIGN.md §4)")
+    return True, ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _tok_struct(cfg: ModelConfig, batch: int, seq: int, mesh) -> Dict[str, Any]:
+    """Token-side input structs for forward/prefill (no labels)."""
+    bax, _ = SH.batch_spec(cfg, batch, mesh)
+    nsh = lambda *spec: NamedSharding(mesh, P(*spec))
+    if cfg.n_codebooks:
+        return {"tokens": _sds((batch, cfg.n_codebooks, seq), jnp.int32,
+                               nsh(bax, None, None))}
+    if cfg.family == "vlm":
+        vt = cfg.vision_tokens
+        return {
+            "tokens": _sds((batch, seq - vt), jnp.int32, nsh(bax, None)),
+            "patch_embeds": _sds((batch, vt, cfg.d_model), jnp.float32,
+                                 nsh(bax, None, None)),
+        }
+    return {"tokens": _sds((batch, seq), jnp.int32, nsh(bax, None))}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (step_fn, args tuple of ShapeDtypeStructs, donate_argnums,
+    out_shardings or None)."""
+    info = SHAPES[shape_name]
+    kind, seq, batch = info["kind"], info["seq"], info["batch"]
+    nsh = lambda *spec: NamedSharding(mesh, P(*spec))
+    bax, _ = SH.batch_spec(cfg, batch, mesh)
+
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = SH.param_shardings(cfg, params_shape, mesh)
+    params_s = jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, s), params_shape, p_sh)
+
+    if kind == "train":
+        from repro.training.train_lib import make_train_step
+        opt_cfg = OPT.AdamWConfig()
+        opt_shape = jax.eval_shape(lambda: OPT.init_state(params_shape))
+        o_sh = SH.opt_shardings(cfg, params_shape, opt_shape, mesh)
+        opt_s = jax.tree.map(lambda l, s: _sds(l.shape, l.dtype, s),
+                             opt_shape, o_sh,
+                             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        batch_d = _tok_struct(cfg, batch, seq, mesh)
+        batch_d["labels"] = jax.tree.map(
+            lambda t: t, batch_d["tokens"])  # same shape/sharding as tokens
+        if cfg.family == "vlm":
+            vt = cfg.vision_tokens
+            batch_d["labels"] = _sds((batch, seq), jnp.int32, nsh(bax, None))
+            batch_d["loss_mask"] = _sds((batch, seq), jnp.float32,
+                                        nsh(bax, None))
+        step = make_train_step(cfg, opt_cfg)
+        metrics_sh = {"loss": nsh(), "grad_norm": nsh()}
+        return (step, (params_s, opt_s, batch_d), (0, 1),
+                (p_sh, o_sh, metrics_sh))
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(cfg, params, batch)
+        batch_d = _tok_struct(cfg, batch, seq, mesh)
+        if SH.ATTN_REPLICATE_IF_RAGGED:
+            # under the ZeRO-attention/seq-parallel config the inferred cache
+            # sharding degrades to batch-only and overflows HBM at 32k —
+            # pin it (batch over data, hd over model)
+            cache_shape = jax.eval_shape(
+                lambda p, b: M.prefill(cfg, p, b)[1], params_shape, batch_d)
+            pc_sh = SH.cache_shardings(cfg, cache_shape, mesh, batch)
+            logits_sh = NamedSharding(mesh, P(bax, None, None))
+            return prefill_step, (params_s, batch_d), (), (logits_sh, pc_sh)
+        return prefill_step, (params_s, batch_d), (), None
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: M.init_decode_cache(cfg, batch, seq))
+    c_sh = SH.cache_shardings(cfg, cache_shape, mesh, batch)
+    cache_s = jax.tree.map(lambda l, s: _sds(l.shape, l.dtype, s),
+                           cache_shape, c_sh)
+    if cfg.n_codebooks:
+        tok = _sds((batch, cfg.n_codebooks, 1), jnp.int32,
+                   nsh(bax, None, None))
+    else:
+        tok = _sds((batch, 1), jnp.int32, nsh(bax, None))
+    pos = _sds((batch,), jnp.int32, nsh(bax))
+
+    def serve_step(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos)
+
+    return serve_step, (params_s, tok, cache_s, pos), (2,), (None, c_sh)

@@ -1,0 +1,71 @@
+"""Training driver (deliverable (b)): trains a ~100M-scale model for a few
+hundred steps on the synthetic LM stream with AdamW + cosine schedule and
+periodic checkpointing.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 300 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, make_batches
+from repro.training.optimizer import AdamWConfig, init_state
+from repro.training.train_lib import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (0 = reduced config default)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    if args.d_model:
+        cfg = dataclasses.replace(cfg, d_model=args.d_model)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    n_params = M and sum(x.size for x in jax.tree.leaves(
+        M.init_params(cfg, jax.random.PRNGKey(0))))
+    print(f"model={cfg.name} params={n_params / 1e6:.1f}M")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                      total_steps=args.steps)
+    state = init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    data = make_batches(DataConfig(batch_size=args.batch, seq_len=args.seq,
+                                   vocab_size=cfg.vocab_size), cfg)
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, state, metrics = step_fn(params, state, batch)
+        if step % args.log_every == 0 or step == 1:
+            tok_s = args.batch * args.seq * step / (time.time() - t0)
+            print(f"step {step:>5}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"tok/s {tok_s:,.0f}", flush=True)
+        if args.ckpt and step % args.ckpt_every == 0:
+            ckpt.save(f"{args.ckpt}/step{step}", params, step=step)
+            print(f"checkpointed -> {args.ckpt}/step{step}.npz")
+
+
+if __name__ == "__main__":
+    main()

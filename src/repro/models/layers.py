@@ -1,0 +1,679 @@
+"""Pure-JAX building blocks shared by every architecture in the zoo.
+
+Memory discipline (these run at seq 4k-500k under 512-way SPMD):
+
+* ``flash_attention`` is a custom-VJP chunked online-softmax attention —
+  neither forward nor backward ever materializes (Sq, Skv) for more than one
+  (q_chunk, kv_chunk) tile, exactly the schedule of the Pallas TPU kernel.
+* ``mlstm_chunkwise`` is the chunkwise-parallel mLSTM form: intra-chunk
+  (C x C) MXU matmuls + inter-chunk state passing, so BPTT stores only
+  chunk-boundary states instead of per-step matrix memories.
+* ``chunked_scan`` wraps sequential recurrences (sLSTM, mamba) in
+  remat-per-chunk scans: backward recomputes inside one chunk at a time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / rope / misc
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+# --------------------------------------------------------------------------
+# flash attention (grouped GQA, custom VJP)
+# --------------------------------------------------------------------------
+
+def _chunk_mask(q_pos, k_pos, valid_kv, window):
+    """(Cq, Ckv) bool mask: causal + padding + optional sliding window."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    m &= k_pos[None, :] < valid_kv
+    m &= jnp.where(window > 0, k_pos[None, :] > q_pos[:, None] - window, True)
+    return m
+
+
+def _flash_fwd(q, k, v, q_offset, window, kv_len, logit_cap, q_chunk, kv_chunk):
+    """Returns (o, L) with o: (B, Sq, KV, R, hd), L = m + log(l): (B, Sq, KV, R).
+
+    q: (B, Sq, KV, R, hd) grouped query; k, v: (B, Skv, KV, hd).
+    """
+    B, Sq, KV, R, hd = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = hd ** -0.5
+
+    qp = q.reshape(B, nq, q_chunk, KV, R, hd).transpose(1, 0, 2, 3, 4, 5)
+    kp = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vp = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+
+        def kv_step(carry, ki_vi_idx):
+            o, m, l = carry
+            ki, vi, ik = ki_vi_idx
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            if logit_cap:
+                s = softcap(s, logit_cap)
+            mask = _chunk_mask(q_pos, k_pos, kv_len, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, vi.astype(jnp.float32))
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((B, KV, R, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, KV, R, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, R, q_chunk), jnp.float32)
+        (o, m, l), _ = lax.scan(kv_step, (o0, m0, l0),
+                                (kp, vp, jnp.arange(nk, dtype=jnp.int32)))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return None, (o.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2))
+
+    _, (o, lse) = lax.scan(q_step, None, (qp, jnp.arange(nq, dtype=jnp.int32)))
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, R, hd)
+    lse = lse.transpose(1, 0, 2, 3, 4).reshape(B, Sq, KV, R)
+    return o.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _flash(q, k, v, q_offset, window, kv_len, logit_cap, q_chunk, kv_chunk):
+    o, _ = _flash_fwd(q, k, v, q_offset, window, kv_len,
+                      logit_cap, q_chunk, kv_chunk)
+    return o
+
+
+def _flash_vjp_fwd(q, k, v, q_offset, window, kv_len,
+                   logit_cap, q_chunk, kv_chunk):
+    o, lse = _flash_fwd(q, k, v, q_offset, window, kv_len,
+                        logit_cap, q_chunk, kv_chunk)
+    return o, (q, k, v, o, lse, q_offset, window, kv_len)
+
+
+def _flash_vjp_bwd(logit_cap, q_chunk, kv_chunk, res, do):
+    q, k, v, o, lse, q_offset, window, kv_len = res
+    B, Sq, KV, R, hd = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = hd ** -0.5
+
+    D = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    qp = q.reshape(B, nq, q_chunk, KV, R, hd).transpose(1, 0, 2, 3, 4, 5)
+    dop = do.reshape(B, nq, q_chunk, KV, R, hd).transpose(1, 0, 2, 3, 4, 5)
+    Lp = lse.reshape(B, nq, q_chunk, KV, R).transpose(1, 0, 2, 3, 4)
+    Dp = D.reshape(B, nq, q_chunk, KV, R).transpose(1, 0, 2, 3, 4)
+    kp = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vp = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def kv_step(dq_acc, kvi):
+        ki, vi, ik = kvi
+        k_pos = ik * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+
+        def q_step(carry, qs):
+            dk_i, dv_i = carry
+            qi, doi, Li, Di, iq = qs
+            q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+            u = jnp.einsum("bqgrd,bkgd->bgrqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            if logit_cap:
+                s = softcap(u, logit_cap)
+                dcap = 1.0 - jnp.square(s / logit_cap)
+            else:
+                s, dcap = u, None
+            mask = _chunk_mask(q_pos, k_pos, kv_len, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - Li.transpose(0, 2, 3, 1)[..., None]), 0.0)
+            dv_c = jnp.einsum("bgrqk,bqgrd->bkgd", p, doi.astype(jnp.float32))
+            dp = jnp.einsum("bqgrd,bkgd->bgrqk", doi.astype(jnp.float32),
+                            vi.astype(jnp.float32))
+            ds = p * (dp - Dp_t(Di))
+            if dcap is not None:
+                ds = ds * dcap
+            dq_c = jnp.einsum("bgrqk,bkgd->bqgrd", ds,
+                              ki.astype(jnp.float32)) * scale
+            dk_c = jnp.einsum("bgrqk,bqgrd->bkgd", ds,
+                              qi.astype(jnp.float32)) * scale
+            return (dk_i + dk_c, dv_i + dv_c), dq_c
+
+        def Dp_t(Di):
+            return Di.transpose(0, 2, 3, 1)[..., None]
+
+        dk0 = jnp.zeros((B, kv_chunk, KV, hd), jnp.float32)
+        dv0 = jnp.zeros((B, kv_chunk, KV, hd), jnp.float32)
+        (dk_i, dv_i), dq_contrib = lax.scan(
+            q_step, (dk0, dv0),
+            (qp, dop, Lp, Dp, jnp.arange(nq, dtype=jnp.int32)))
+        return dq_acc + dq_contrib, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((nq, B, q_chunk, KV, R, hd), jnp.float32)
+    dq, (dk, dv) = lax.scan(kv_step, dq0,
+                            (kp, vp, jnp.arange(nk, dtype=jnp.int32)))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, R, hd)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, KV, hd)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, KV, hd)
+    zi = lambda x: np.zeros(np.shape(x), jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zi(q_offset), zi(window), zi(kv_len))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# §Perf: materialize repeated KV heads before the flash einsums. Under TP,
+# grouped (KV, R, hd) layouts are inexpressible when R doesn't tile the model
+# axis, costing per-layer q/k all-gathers (measured 30% of mixtral prefill
+# collective bytes); flat H-head layout shards cleanly at R x the KV reads.
+FLAT_GQA = False
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, Sq, H, hd)
+    k: jax.Array,                  # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    q_offset: jax.Array | int = 0,
+    window: jax.Array | int = 0,   # 0 = full causal
+    logit_cap: float = 0.0,
+    kv_len: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Causal flash attention with GQA, cached-prefix offset, sliding windows
+    and logit soft-capping. O(chunk²) transient memory in fwd AND bwd."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if FLAT_GQA and H != KV:
+        k = _repeat_kv(k, H // KV)
+        v = _repeat_kv(v, H // KV)
+        KV = H
+    R = H // KV
+    q_chunk = min(q_chunk, max(Sq, 1))
+    kv_chunk = min(kv_chunk, max(Skv, 1))
+    valid_kv = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32)
+    qg = _pad_to(q.reshape(B, Sq, KV, R, hd), 1, q_chunk)
+    kg = _pad_to(k, 1, kv_chunk)
+    vg = _pad_to(v, 1, kv_chunk)
+    o = _flash(qg, kg, vg, jnp.asarray(q_offset, jnp.int32),
+               jnp.asarray(window, jnp.int32), valid_kv,
+               float(logit_cap), q_chunk, kv_chunk)
+    return o[:, :Sq].reshape(B, Sq, H, hd)
+
+
+def _repeat_kv(k: jax.Array, rep: int) -> jax.Array:
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# §Perf: sequence-parallel prefill attention. When set (e.g. "model"), the
+# inference prefill path distributes *query chunks* over this mesh axis so
+# ragged-head archs (yi-34b: 56 heads vs 16-way TP) run attention without
+# either score all-reduces or replicated compute. Set by launch/dryrun --opt
+# seq-par; numerics identical to flash_attention.
+SEQ_PARALLEL_AXIS = None
+
+
+def flash_attention_seqpar(
+    q: jax.Array,                  # (B, Sq, H, hd)
+    k: jax.Array,                  # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    q_offset: jax.Array | int = 0,
+    window: jax.Array | int = 0,
+    logit_cap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    axis: str = "model",
+) -> jax.Array:
+    """Forward-only flash attention with the q-chunk dim sharded over
+    ``axis``: every device owns nq/|axis| query tiles and streams the full
+    (replicated-over-axis, batch-sharded) KV past them. No collectives in
+    the score/PV matmuls; one output reshard at the end."""
+    from jax.sharding import PartitionSpec as P
+
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    R = H // KV
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    qp = _pad_to(q.reshape(B, Sq, KV, R, hd), 1, q_chunk)
+    kp = _pad_to(k, 1, kv_chunk)
+    vp = _pad_to(v, 1, kv_chunk)
+    nq = qp.shape[1] // q_chunk
+    nk = kp.shape[1] // kv_chunk
+    qg = qp.reshape(B, nq, q_chunk, KV, R, hd)
+    qg = jax.lax.with_sharding_constraint(
+        qg, P(None, axis, None, None, None, None))
+    kg = kp.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vg = vp.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+    # absolute positions of every (nq, q_chunk) query
+    q_pos = (q_off + jax.lax.broadcasted_iota(jnp.int32, (nq, q_chunk), 0)
+             * q_chunk
+             + jax.lax.broadcasted_iota(jnp.int32, (nq, q_chunk), 1))
+
+    def kv_step(carry, kv):
+        o, m, l = carry
+        ki, vi, ik = kv
+        k_pos = ik * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+        s = jnp.einsum("bnqgrd,bkgd->bgrnqk", qg.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * scale
+        if logit_cap:
+            s = softcap(s, logit_cap)
+        mask = k_pos[None, None, :] <= q_pos[..., None]
+        mask &= k_pos[None, None, :] < Skv
+        mask = mask & jnp.where(
+            win > 0, k_pos[None, None, :] > q_pos[..., None] - win, True)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bgrnqk,bkgd->bgrnqd", p, vi.astype(jnp.float32))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, KV, R, nq, q_chunk, hd), jnp.float32)
+    m0 = jnp.full((B, KV, R, nq, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, R, nq, q_chunk), jnp.float32)
+    (o, m, l), _ = lax.scan(kv_step, (o0, m0, l0),
+                            (kg, vg, jnp.arange(nk, dtype=jnp.int32)))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    o = o.transpose(0, 3, 4, 1, 2, 5).reshape(B, nq * q_chunk, H, hd)
+    return o[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                  # (B, 1, H, hd)
+    k_cache: jax.Array,            # (B, Smax, KV, hd)
+    v_cache: jax.Array,
+    *,
+    pos: jax.Array,                # (B,) cache length incl. the new token
+    window: jax.Array | int = 0,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) cache.
+    Direct contraction: scores are (B, H, Smax) — linear in context; GSPMD
+    reduces over a sharded Smax with small collectives instead of gathering
+    the cache."""
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    R = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, R, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache.astype(jnp.float32)) * scale
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    k_pos = jnp.arange(Smax, dtype=jnp.int32)[None]
+    mask = k_pos < pos[:, None]
+    win = jnp.asarray(window, jnp.int32)
+    mask &= jnp.where(win > 0, k_pos > pos[:, None] - 1 - win, True)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# remat-per-chunk sequential scan helper
+# --------------------------------------------------------------------------
+
+def chunked_scan(f, carry, xs, chunk: int = 256, remat: bool = True):
+    """lax.scan(f, carry, xs) with time chunking: outer scan over chunks of
+    ``chunk`` steps, inner scan rematerialized — BPTT stores only
+    chunk-boundary carries."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= chunk:
+        return lax.scan(f, carry, xs)
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+    # pad on the *time* axis; padded steps must be no-ops for the carry, so we
+    # mask them: f sees a validity flag appended by the caller when needed.
+    xs_p = jax.tree.map(lambda x: _pad_to(x, 0, chunk), xs)
+    xs_c = jax.tree.map(lambda x: x.reshape((nc, chunk) + x.shape[1:]), xs_p)
+    valid = (jnp.arange(Sp) < S).reshape(nc, chunk)
+
+    def chunk_body(c, xv):
+        x, val = xv
+
+        def step(c2, sv):
+            s, ok = sv
+            new_c, y = f(c2, s)
+            new_c = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new_c, c2)
+            return new_c, y
+
+        return lax.scan(step, c, (x, val))
+
+    body = jax.checkpoint(chunk_body) if remat else chunk_body
+    carry, ys = lax.scan(body, carry, (xs_c, valid))
+    ys = jax.tree.map(
+        lambda y: y.reshape((Sp,) + y.shape[2:])[:S], ys)
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# feed-forward: SwiGLU + MoE
+# --------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    h = jax.nn.silu(dense(x, wg)) * dense(x, wu)
+    return dense(h, wd)
+
+
+def moe_dense(x, router_w, wg, wu, wd, top_k: int):
+    """Dense-compute MoE: scan over experts, weight by top-k router probs.
+    Paper-faithful baseline path (data-independent shapes, expert-shardable);
+    HLO FLOPs are E/top_k x the active FLOPs — visible in the roofline
+    useful-ratio and addressed by moe_capacity (§Perf)."""
+    E = router_w.shape[-1]
+    logits = dense(x, router_w).astype(jnp.float32)
+    topv, topi = lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    w_full = (oh * gates[..., None]).sum(axis=-2)        # (B, S, E)
+
+    # accumulate in the input dtype: the per-expert row-parallel psums move
+    # (B,S,D) per expert per layer over ICI — f32 would double that traffic
+    # (§Perf mixtral iteration 2; top-2 weighted sums are bf16-safe)
+    acc_dt = x.dtype
+    def body(acc, ew):
+        wg_e, wu_e, wd_e, w_e = ew
+        y = swiglu(x, wg_e, wu_e, wd_e)
+        return acc + (y * w_e[..., None].astype(y.dtype)).astype(acc_dt), None
+
+    acc0 = jnp.zeros(x.shape, acc_dt)
+    acc, _ = lax.scan(body, acc0, (wg, wu, wd, jnp.moveaxis(w_full, -1, 0)))
+    return acc.astype(x.dtype)
+
+
+def moe_capacity(x, router_w, wg, wu, wd, top_k: int, *,
+                 capacity_factor: float = 1.25, token_chunk: int = 4096):
+    """Capacity-based dispatch MoE (beyond-paper perf path): chunked one-hot
+    dispatch/combine einsums; each expert computes only its buffer."""
+    B, S, D = x.shape
+    E = router_w.shape[-1]
+    xt = x.reshape(B * S, D)
+    T = B * S
+    token_chunk = min(token_chunk, T)
+    n_chunks = -(-T // token_chunk)
+    Tp = n_chunks * token_chunk
+    xt = jnp.pad(xt, ((0, Tp - T), (0, 0)))
+    xt = xt.reshape(n_chunks, token_chunk, D)
+    cap = max(int(capacity_factor * token_chunk * top_k / E), 1)
+
+    def chunk_body(_, xc):
+        logits = dense(xc, router_w).astype(jnp.float32)
+        topv, topi = lax.top_k(logits, top_k)
+        gates = jax.nn.softmax(topv, axis=-1)
+        oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)          # (C,k,E)
+        pos = jnp.cumsum(oh.reshape(-1, E), axis=0).reshape(oh.shape) * oh - 1.0
+        keep = (pos < cap) & (oh > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        disp = oh[..., None] * keep[..., None] * pos_oh          # (C,k,E,cap)
+        disp_ce = disp.sum(axis=1)                               # (C,E,cap)
+        xbuf = jnp.einsum("ceC,cd->eCd", disp_ce,
+                          xc.astype(jnp.float32)).astype(xc.dtype)
+        h = jax.nn.silu(jnp.einsum("eCd,edf->eCf", xbuf, wg))
+        h = h * jnp.einsum("eCd,edf->eCf", xbuf, wu)
+        ybuf = jnp.einsum("eCf,efd->eCd", h, wd)
+        comb = (disp * gates[:, :, None, None]).sum(axis=1)      # (C,E,cap)
+        yc = jnp.einsum("ceC,eCd->cd", comb, ybuf.astype(jnp.float32))
+        return None, yc.astype(xc.dtype)
+
+    _, y = lax.scan(chunk_body, None, xt)
+    return y.reshape(Tp, D)[:T].reshape(B, S, D)
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (mLSTM input path)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x: (B, S, D), w: (K, D); state carries the last K-1 inputs."""
+    K = w.shape[0]
+    if K == 1:
+        return x * w[0], state
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xc = jnp.concatenate([state, x], axis=1)
+    y = sum(xc[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xc[:, -(K - 1):]
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# mLSTM: chunkwise-parallel (train/prefill) + recurrent (decode)
+# --------------------------------------------------------------------------
+
+def _mlstm_init(B, H, hd):
+    return (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), NEG_INF, jnp.float32))
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, state=None):
+    """Strictly-recurrent mLSTM (matrix memory, stabilized exp gating).
+    Used for S==1 decode and as the oracle for the chunkwise form."""
+    B, S, H, hd = q.shape
+    C0, n0, m0 = state if state is not None else _mlstm_init(B, H, hd)
+    qs = jnp.moveaxis(q.astype(jnp.float32), 1, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 1, 0) * (hd ** -0.5)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    igs = jnp.moveaxis(i_gate.astype(jnp.float32), 1, 0)
+    fgs = jnp.moveaxis(f_gate.astype(jnp.float32), 1, 0)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, ig, fg = xs
+        log_f = -jax.nn.softplus(-fg)
+        m_new = jnp.maximum(log_f + m, ig)
+        i_sc = jnp.exp(ig - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        C = f_sc[..., None, None] * C + i_sc[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])
+        n = f_sc[..., None] * n + i_sc[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt))
+        floor = jnp.exp(jnp.minimum(-m_new, 30.0))
+        h = num / jnp.maximum(den, floor)[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), (qs, ks, vs, igs, fgs))
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (TPU-native form, DESIGN.md §3).
+
+    Within a chunk everything is (C x C)/(C x hd) matmuls (MXU-friendly);
+    across chunks only the (hd x hd) state passes, so BPTT residuals are
+    chunk-boundary states instead of per-step matrix memories.
+    Matches ``mlstm_scan`` bit-for-bit up to fp assoc error.
+    """
+    B, S, H, hd = q.shape
+    state = state if state is not None else _mlstm_init(B, H, hd)
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+    padt = lambda x: _pad_to(x, 1, chunk)
+    qf = padt(q.astype(jnp.float32))
+    kf = padt(k.astype(jnp.float32)) * (hd ** -0.5)
+    vf = padt(v.astype(jnp.float32))
+    # padded steps: no input (i = -inf), no decay (log f = 0 via f = +inf)
+    ig = jnp.pad(i_gate.astype(jnp.float32), ((0, 0), (0, Sp - S), (0, 0)),
+                 constant_values=NEG_INF)
+    fg = jnp.pad(f_gate.astype(jnp.float32), ((0, 0), (0, Sp - S), (0, 0)),
+                 constant_values=80.0)
+
+    resh = lambda x: jnp.moveaxis(
+        x.reshape((B, nc, chunk) + x.shape[2:]), 1, 0)
+    qc, kc, vc, igc, fgc = map(resh, (qf, kf, vf, ig, fg))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_body(carry, xs):
+        C_in, n_in, m_in = carry               # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, ii, fi = xs                # (B,C,H,...)
+        lf = -jax.nn.softplus(-fi)             # (B,C,H)
+        F = jnp.cumsum(lf, axis=1)
+        g = ii - F                             # (B,C,H)
+        Mt = jnp.maximum(m_in[:, None], lax.cummax(g, axis=1))
+        m_t = F + Mt
+        in_scale = jnp.exp(m_in[:, None] - Mt)             # (B,C,H)
+        # intra-chunk scores: A[t,s] = (q_t . k_s) * exp(g_s - M_t), s <= t
+        qk = jnp.einsum("bthd,bshd->bhts", qi, ki)
+        wts = jnp.exp(g.transpose(0, 2, 1)[:, :, None, :]
+                      - Mt.transpose(0, 2, 1)[:, :, :, None])   # (B,H,t,s)
+        A = qk * wts * causal[None, None]
+        # outputs
+        Cq = jnp.einsum("bhij,bthj->bthi", C_in, qi)
+        num = in_scale[..., None] * Cq + jnp.einsum("bhts,bshd->bthd", A, vi)
+        nq = jnp.einsum("bhj,bthj->bth", n_in, qi)         # (B,C,H)
+        den = in_scale * nq + jnp.einsum("bhts->bth", A)
+        floor = jnp.exp(jnp.minimum(-m_t, 30.0))
+        h = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+        # state update to chunk end
+        MT = Mt[:, -1]                                       # (B,H)
+        state_scale = jnp.exp(m_in - MT)                     # (B,H)
+        wk = jnp.exp(g - MT[:, None])                        # (B,C,H)
+        C_out = state_scale[..., None, None] * C_in + jnp.einsum(
+            "bshd,bsh,bshe->bhde", vi, wk, ki)
+        n_out = state_scale[..., None] * n_in + jnp.einsum(
+            "bsh,bshd->bhd", wk, ki)
+        m_out = F[:, -1] + MT
+        return (C_out, n_out, m_out), h
+
+    (C, n, m), hs = lax.scan(jax.checkpoint(chunk_body), state,
+                             (qc, kc, vc, igc, fgc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, H, hd)[:, :S]
+    return h.astype(q.dtype), (C, n, m)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_scan(zifo, r_w, state=None, chunk: int = 256):
+    """sLSTM: scalar memory, block-diagonal recurrence, exp gating.
+    zifo: (B, S, H, 4*hd) input pre-activations."""
+    B, S, H, hd4 = zifo.shape
+    hd = hd4 // 4
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = (c0, n0, h0, m0)
+    xs = jnp.moveaxis(zifo.astype(jnp.float32), 1, 0)
+    rw = r_w.astype(jnp.float32)
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhi,hio->bho", h, rw)
+        z, i, f, o = jnp.split(xt + rec, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = -jax.nn.softplus(-f)
+        m_new = jnp.maximum(log_f + m, i)
+        i_sc = jnp.exp(i - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        c = f_sc * c + i_sc * z
+        n = f_sc * n + i_sc
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = chunked_scan(step, state, xs, chunk=chunk)
+    return jnp.moveaxis(hs, 0, 1).astype(zifo.dtype), (c, n, h, m)
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective SSM (Hymba hybrid heads)
+# --------------------------------------------------------------------------
+
+def mamba_scan(x, delta, A, Bm, Cm, D, state=None, chunk: int = 256):
+    """h_t = exp(delta_t A) h_{t-1} + delta_t (B_t ⊗ x_t); y = C_t·h + D x.
+    Remat-per-chunk scan; state (B, H, hd, N) is the SSM document-cache
+    payload."""
+    Bb, S, H, hd = x.shape
+    N = A.shape[-1]
+    if state is None:
+        state = jnp.zeros((Bb, H, hd, N), jnp.float32)
+    xs = jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    ds = jnp.moveaxis(delta.astype(jnp.float32), 1, 0)
+    Bs = jnp.moveaxis(Bm.astype(jnp.float32), 1, 0)
+    Cs = jnp.moveaxis(Cm.astype(jnp.float32), 1, 0)
+    Af = A.astype(jnp.float32)
+
+    def step(h, xt):
+        xv, dt, bt, ct = xt
+        decay = jnp.exp(dt[..., None, None] * Af[None])
+        inp = (dt[..., None] * xv)[..., None] * bt[:, None, None, :]
+        h = decay * h + inp
+        y = jnp.einsum("bhdn,bn->bhd", h, ct) + D[None] * xv
+        return h, y
+
+    state, ys = chunked_scan(step, state, (xs, ds, Bs, Cs), chunk=chunk)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

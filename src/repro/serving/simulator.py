@@ -1,0 +1,389 @@
+"""Discrete-event RAG serving simulator.
+
+Executes the *identical* controller / knowledge-tree / PGDSF / reorder /
+speculative-pipelining code as the real JAX engine, against an analytic
+hardware profile (A10G, H800, TPU v5e) — this is how the paper-scale TTFT /
+throughput claims are validated on a CPU-only container (DESIGN.md §7).
+
+Engine model (matches the paper's testbed semantics):
+  * vector search runs on host CPUs, staged, one lane per request;
+  * the LLM engine serves one iteration at a time: either ONE prefill
+    (vLLM-style iteration-level scheduling, paper max batch 4) or one decode
+    step for the whole running batch;
+  * prefill latency = host->GPU promotion transfer + T(alpha, beta);
+  * a speculative prefill whose documents go stale is cancelled if still
+    queued; if running it completes (the paper cancels "after the current
+    iteration" — one prefill == one iteration here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.controller import RAGController, RequestPlan
+from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
+from repro.core.profiler import CostProfiler, HardwareProfile
+from repro.core.reorder import ReorderQueue
+from repro.core.speculative import SpecState, SpeculativeController
+from repro.retrieval.corpus import Corpus, Request
+
+
+@dataclasses.dataclass
+class SimConfig:
+    profile: HardwareProfile
+    gpu_cache_bytes: float = 8 * 2**30
+    host_cache_bytes: float = 192 * 2**30
+    max_batch: int = 4
+    max_prefill_bs: int = 4
+    top_k: int = 2
+    policy: str = "pgdsf"
+    reorder: bool = True
+    reorder_window: int = 32
+    speculative: bool = True
+    search_fraction: float = 1.0
+    system_prompt_tokens: int = 0
+    cache_top_k: int = 0           # paper §8 "Large top-k": cache only the
+                                   # first k docs of each request's sequence
+                                   # (0 = cache all retrieved docs)
+    prefill_chunk: int = 512       # tokens per prefill iteration (vLLM-style
+                                   # iteration-level scheduling; stale
+                                   # speculation cancels between iterations)
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    avg_ttft: float
+    p50_ttft: float
+    p99_ttft: float
+    avg_tpot: float                # paper §8: time per output token
+    doc_hit_rate: float
+    completed: int
+    duration: float
+    throughput_rps: float
+    avg_non_overlap_search: float
+    wasted_prefills: int
+    gpu_evictions: int
+    swap_out_bytes: int
+    ttfts: List[float] = dataclasses.field(default_factory=list, repr=False)
+
+
+class _SimBackend(CacheBackend):
+    """Payloads are byte counts; transfers cost PCIe time."""
+
+    def __init__(self, profile: HardwareProfile):
+        self.profile = profile
+
+    def swap_out(self, node):
+        node.payload_host = node.payload_gpu
+        return self.profile.transfer_time(node.bytes_)
+
+    def load(self, node):
+        node.payload_gpu = node.payload_host
+        return self.profile.transfer_time(node.bytes_)
+
+
+@dataclasses.dataclass
+class _Job:
+    req: "_ReqState"
+    docs: Tuple[int, ...]
+    speculative: bool
+    cancelled: bool = False
+    plan: Optional[RequestPlan] = None
+    started: float = -1.0
+    start_candidate: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _ReqState:
+    r: Request
+    spec: SpecState
+    stages: List = dataclasses.field(default_factory=list)
+    search_start: float = 0.0
+    search_end: float = -1.0
+    final_docs: Optional[Tuple[int, ...]] = None
+    final_prefill_first_start: float = -1.0   # for non-overlap metric
+    prefill_done: float = -1.0
+    prefill_docs: Optional[Tuple[int, ...]] = None
+    ttft: float = -1.0
+    remaining_out: int = 0
+    context: int = 0
+    done: bool = False
+    finish_time: float = -1.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    queued_jobs: List[_Job] = dataclasses.field(default_factory=list)
+    spec_start_by_docs: Dict[Tuple[int, ...], float] = dataclasses.field(
+        default_factory=dict)
+
+
+class RAGSimulator:
+    def __init__(self, cfg: SimConfig, corpus: Corpus, index,
+                 requests: Sequence[Request],
+                 profiler: Optional[CostProfiler] = None):
+        self.cfg = cfg
+        self.corpus = corpus
+        self.index = index
+        self.requests = list(requests)
+        prof = profiler or CostProfiler.from_profile(cfg.profile)
+        self.tree = KnowledgeTree(
+            int(cfg.gpu_cache_bytes), int(cfg.host_cache_bytes),
+            policy=cfg.policy, profiler=prof,
+            backend=_SimBackend(cfg.profile),
+            bytes_per_token=int(cfg.profile.kv_bytes_per_token),
+        )
+        self.controller = RAGController(self.tree)
+        self.spec_ctl = SpeculativeController(cfg.max_prefill_bs,
+                                              enabled=cfg.speculative)
+        self.queue: ReorderQueue[_Job] = ReorderQueue(
+            cfg.reorder_window, enabled=cfg.reorder)
+        self.decode_running: List[_ReqState] = []
+        self.engine_busy = False
+        self.now = 0.0
+        self._events: List = []
+        self._seq = itertools.count()
+        self._prefills_running = 0
+        self.sched_times: List[float] = []
+        self._all_states: List[_ReqState] = []
+
+    # ---- event plumbing ---------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    # ---- main loop --------------------------------------------------------
+
+    def run(self) -> SimMetrics:
+        for r in self.requests:
+            self._push(r.arrival, "arrival", r)
+        while self._events:
+            self.now, _, kind, payload = heapq.heappop(self._events)
+            getattr(self, f"_on_{kind}")(payload)
+        return self._metrics()
+
+    # ---- arrival & staged retrieval ----------------------------------------
+
+    def _on_arrival(self, r: Request) -> None:
+        st = _ReqState(r=r, spec=SpecState(r.req_id),
+                       remaining_out=r.output_len, search_start=self.now)
+        self._all_states.append(st)
+        st.stages = list(self.index.staged_search(
+            r.query_vec, self.cfg.top_k, self.cfg.search_fraction))
+        t = self.now
+        for stage in st.stages:
+            t += stage.seconds
+            self._push(t, "stage", (st, stage))
+
+    def _pool_size(self) -> int:
+        return len(self.queue) + self._prefills_running
+
+    def _on_stage(self, payload) -> None:
+        st, stage = payload
+        docs = tuple(stage.topk)
+        if stage.is_final:
+            st.search_end = self.now
+            st.final_docs = docs
+        import time as _t
+        t0 = _t.perf_counter()
+        action, d = self.spec_ctl.on_stage(
+            st.spec, docs, self._pool_size(), is_final=stage.is_final)
+        if action in ("terminate_and_launch", "terminate"):
+            for job in st.queued_jobs:
+                if not job.cancelled and job.docs != docs:
+                    job.cancelled = True
+        if action in ("launch", "terminate_and_launch"):
+            job = _Job(req=st, docs=d, speculative=not stage.is_final)
+            st.queued_jobs.append(job)
+            # cached/compute lengths for cache-aware reordering
+            plan_docs = [self.corpus.doc_lengths[i] for i in d]
+            hit = self.tree.match_prefix(d)
+            cached = sum(n.n_tokens for n in hit)
+            compute = sum(plan_docs) + len(st.r.question_tokens) - cached
+            self.queue.push(job, cached, max(compute, 1))
+        self.sched_times.append(_t.perf_counter() - t0)
+        if stage.is_final:
+            self._maybe_finalize(st)
+        self._engine_maybe_start()
+
+    def _maybe_finalize(self, st: _ReqState) -> None:
+        """Search finished: if a matching prefill already completed, emit the
+        first token now (speculation pays off — paper Fig. 11)."""
+        if st.ttft >= 0 or st.done:
+            return
+        if st.prefill_docs == st.final_docs and st.prefill_done >= 0:
+            self._first_token(st, max(self.now, st.prefill_done))
+
+    # ---- engine ------------------------------------------------------------
+
+    def _engine_maybe_start(self) -> None:
+        if self.engine_busy:
+            return
+        import time as _t
+        t0 = _t.perf_counter()
+        job = self._next_prefill()
+        self.sched_times.append(_t.perf_counter() - t0)
+        if job is not None:
+            self._start_prefill(job)
+        elif self.decode_running:
+            self._start_decode()
+
+    def _next_prefill(self) -> Optional[_Job]:
+        if len(self.decode_running) >= self.cfg.max_batch:
+            return None
+        self.queue.refresh(self._job_lens)
+        while True:
+            job = self.queue.pop()
+            if job is None:
+                return None
+            if job.cancelled or job.req.done:
+                continue
+            return job
+
+    def _job_lens(self, job: _Job) -> Tuple[int, int]:
+        hit = self.tree.match_prefix(job.docs)
+        cached = sum(n.n_tokens for n in hit)
+        total = sum(self.corpus.doc_lengths[i] for i in job.docs) \
+            + len(job.req.r.question_tokens)
+        return cached, max(total - cached, 1)
+
+    def _start_prefill(self, job: _Job) -> None:
+        st = job.req
+        doc_tokens = [int(self.corpus.doc_lengths[i]) for i in job.docs]
+        plan = self.controller.plan(job.docs, doc_tokens,
+                                    len(st.r.question_tokens)
+                                    + self.cfg.system_prompt_tokens)
+        transfer = self.controller.promote(plan)
+        compute = self.tree.profiler.estimate(plan.alpha, plan.beta)
+        job.plan = plan
+        job.started = self.now
+        if st.final_docs is not None and job.docs == st.final_docs \
+                and st.final_prefill_first_start < 0:
+            st.final_prefill_first_start = self.now
+        elif st.final_docs is None:
+            # provisional docs may turn out final; record candidate start
+            job.start_candidate = self.now
+            st.spec_start_by_docs.setdefault(job.docs, self.now)
+        self.engine_busy = True
+        self._prefills_running += 1
+        # chunked prefill: n iterations, cancellable between them (Alg. 2
+        # "terminate after the current iteration")
+        n_iters = max(1, -(-plan.beta // self.cfg.prefill_chunk))
+        iter_t = compute / n_iters
+        self._push(self.now + transfer + iter_t, "prefill_iter",
+                   (job, 1, n_iters, iter_t))
+
+    def _on_prefill_iter(self, payload) -> None:
+        job, done_iters, n_iters, iter_t = payload
+        st = job.req
+        if done_iters < n_iters and not job.cancelled and not st.done:
+            self._push(self.now + iter_t, "prefill_iter",
+                       (job, done_iters + 1, n_iters, iter_t))
+            return
+        # finished (or cancelled after the current iteration)
+        self.engine_busy = False
+        self._prefills_running -= 1
+        if done_iters >= n_iters and not job.cancelled:
+            # completed prefills populate the tree even if speculative;
+            # §8 "Large top-k": optionally cache only the leading docs
+            self.controller.commit(job.plan,
+                                   max_docs=self.cfg.cache_top_k or None)
+        else:
+            for n in job.plan.hit_nodes:   # unpin without inserting partials
+                n.pinned = False
+        if not job.cancelled and not st.done:
+            st.prefill_done = self.now
+            st.prefill_docs = job.docs
+            if st.final_docs is not None:
+                if job.docs == st.final_docs:
+                    if st.final_prefill_first_start < 0:
+                        st.final_prefill_first_start = job.started
+                    self._first_token(st, max(self.now, st.search_end))
+                # else: wasted speculation; final job is queued already
+        self._engine_maybe_start()
+
+    def _first_token(self, st: _ReqState, t: float) -> None:
+        if st.ttft >= 0:
+            return
+        # credit speculative start for the non-overlap metric
+        if st.final_prefill_first_start < 0:
+            cand = st.spec_start_by_docs.get(st.final_docs)
+            if cand is not None:
+                st.final_prefill_first_start = cand
+        st.ttft = t - st.r.arrival
+        st.context = (sum(int(self.corpus.doc_lengths[i]) for i in st.final_docs)
+                      + len(st.r.question_tokens))
+        st.remaining_out -= 1
+        if st.remaining_out <= 0:
+            st.done = True
+            st.finish_time = t
+        else:
+            self.decode_running.append(st)
+        self._engine_maybe_start()
+
+    def _start_decode(self) -> None:
+        batch = list(self.decode_running)
+        ctx = float(np.mean([s.context for s in batch]))
+        dt = self.cfg.profile.decode_time(len(batch), ctx)
+        self.engine_busy = True
+        self._push(self.now + dt, "decode_done", batch)
+
+    def _on_decode_done(self, batch: List[_ReqState]) -> None:
+        self.engine_busy = False
+        for st in batch:
+            if st not in self.decode_running:
+                continue
+            st.context += 1
+            st.remaining_out -= 1
+            st.token_times.append(self.now)
+            if st.remaining_out <= 0:
+                st.done = True
+                st.finish_time = self.now
+                self.decode_running.remove(st)
+        self._engine_maybe_start()
+
+    # ---- metrics -------------------------------------------------------------
+
+    def _metrics(self) -> SimMetrics:
+        ttfts = []
+        non_overlaps = []
+        finishes = []
+        wasted = 0
+        for st in self._all_states:
+            if st.ttft >= 0:
+                ttfts.append(st.ttft)
+                dur = st.search_end - st.search_start
+                if st.final_prefill_first_start >= 0:
+                    overlap = max(0.0, st.search_end
+                                  - max(st.search_start,
+                                        st.final_prefill_first_start))
+                else:
+                    overlap = 0.0
+                non_overlaps.append(max(0.0, dur - min(overlap, dur)))
+                finishes.append(getattr(st, "finish_time", st.search_end))
+            wasted += st.spec.wasted_launches
+        tpots = []
+        for st in self._all_states:
+            if len(st.token_times) >= 1 and st.ttft >= 0:
+                t0 = st.r.arrival + st.ttft
+                tpots.append((st.token_times[-1] - t0)
+                             / max(len(st.token_times), 1))
+        ttfts_a = np.asarray(ttfts) if ttfts else np.asarray([0.0])
+        duration = (max(finishes) - min(r.arrival for r in self.requests)
+                    if finishes else 0.0)
+        return SimMetrics(
+            avg_ttft=float(ttfts_a.mean()),
+            p50_ttft=float(np.percentile(ttfts_a, 50)),
+            p99_ttft=float(np.percentile(ttfts_a, 99)),
+            avg_tpot=float(np.mean(tpots)) if tpots else 0.0,
+            doc_hit_rate=self.controller.doc_hit_rate,
+            completed=len(ttfts),
+            duration=float(duration),
+            throughput_rps=len(ttfts) / duration if duration > 0 else 0.0,
+            avg_non_overlap_search=float(np.mean(non_overlaps)) if non_overlaps else 0.0,
+            wasted_prefills=wasted,
+            gpu_evictions=self.tree.stats["gpu_evictions"],
+            swap_out_bytes=self.tree.stats["swap_out_bytes"],
+            ttfts=list(map(float, ttfts)),
+        )

@@ -1,0 +1,46 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no tensorstore offline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz-portable
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(p, __step__=np.asarray(step), **flat)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (shapes must match)."""
+    data = np.load(path if str(path).endswith(".npz") else str(path) + ".npz")
+    step = int(data["__step__"])
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        import jax.numpy as jnp
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves), step

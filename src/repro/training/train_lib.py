@@ -1,0 +1,78 @@
+"""Causal-LM training step shared by the train driver and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, AdamWState, apply_updates
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            seq_chunk: int = 512) -> jax.Array:
+    """Causal-LM loss with *chunked* vocab projection: the (B, S, V) logits
+    tensor is never materialized (gemma's V=262k x S=4k would be ~PB-scale);
+    instead the LM head + softmax run per sequence chunk under remat."""
+    x = M.forward_hidden(cfg, params, batch, remat=True)    # (B, S, D)
+    labels = batch["labels"]
+    if cfg.n_codebooks:
+        labels = jnp.moveaxis(labels, 1, 2)                 # (B, S, K)
+    mask = batch.get("loss_mask")
+    if mask is not None and cfg.n_codebooks:
+        mask = jnp.moveaxis(mask, 1, 2)
+
+    B, S = x.shape[:2]
+    chunk = min(seq_chunk, S)
+    nc = S // chunk if S % chunk == 0 else -(-S // chunk)
+    pad = nc * chunk - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)) + ((0, 0),) * (labels.ndim - 2))
+    mp = jnp.ones((B, S) + labels.shape[2:], jnp.float32) if mask is None \
+        else mask.astype(jnp.float32)
+    mp = jnp.pad(mp, ((0, 0), (0, pad)) + ((0, 0),) * (mp.ndim - 2))
+
+    def chunk_loss(_, xs):
+        xc, lc, mc = xs                                     # (B, C, ...)
+        logits = M.lm_logits(cfg, params, xc)               # (B, C, [K,] V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked reduction over the (model-sharded) vocab dim:
+        # take_along_axis would all-gather the logits shard; this reduces to
+        # a scalar psum instead.
+        V = logits.shape[-1]
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                              logits.ndim - 1)
+        gold = jnp.where(vocab_iota == lc[..., None], logits, 0.0).sum(-1)
+        nll = (lse - gold) * mc
+        return None, (nll.sum(), mc.sum())
+
+    resh = lambda a: jnp.moveaxis(
+        a.reshape((B, nc, chunk) + a.shape[2:]), 1, 0)
+    _, (nll_s, m_s) = jax.lax.scan(
+        jax.checkpoint(chunk_loss), None, (resh(xp), resh(lp), resh(mp)))
+    return nll_s.sum() / jnp.maximum(m_s.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig):
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch))(params)
+        params, opt_state, gnorm = apply_updates(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode iteration over a preallocated cache (dry-run `serve_step`)."""
+    def serve_step(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch)
+    return prefill_step

@@ -1,0 +1,82 @@
+"""Fault tolerance (§6) + iterative retrieval (§9) tests."""
+import pytest
+
+from repro.core.controller import RAGController
+from repro.core.fault_tolerance import (RetryPolicy, recover_from_gpu_failure,
+                                        replicate_hot_nodes, serve_with_retry)
+from repro.core.iterative import run_iterative
+from repro.core.knowledge_tree import KnowledgeTree
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+
+
+def make_tree(gpu=1000, host=4000):
+    return KnowledgeTree(gpu, host, profiler=CostProfiler.from_profile(
+        A10G_MISTRAL_7B), bytes_per_token=1)
+
+
+def test_hot_node_replication_and_recovery():
+    t = make_tree()
+    c = RAGController(t)
+    # hot chain [1,2], cold node [3]
+    for _ in range(5):
+        p = c.plan([1, 2], [100, 100], 16)
+        c.promote(p)
+        c.commit(p)
+    p = c.plan([3], [100], 16)
+    c.promote(p)
+    c.commit(p)
+    n = replicate_hot_nodes(t, budget_bytes=200)
+    assert n == 200            # the two hottest nodes
+    t.check_invariants()
+    recovered, lost = recover_from_gpu_failure(t)
+    assert recovered == 2 and lost == 1
+    t.check_invariants()
+    # the hot path is still a (host) cache hit; the cold one is gone
+    assert len(t.match_prefix([1, 2])) == 2
+    assert len(t.match_prefix([3])) == 0
+
+
+def test_recovery_never_leaves_orphan_children():
+    t = make_tree()
+    c = RAGController(t)
+    p = c.plan([1, 2, 3], [100] * 3, 16)
+    c.promote(p)
+    c.commit(p)
+    # replicate only the root child -> children must be dropped on failure
+    replicate_hot_nodes(t, budget_bytes=100)
+    recovered, lost = recover_from_gpu_failure(t)
+    assert recovered == 1 and lost == 2
+    t.check_invariants()
+
+
+def test_retry_wrapper():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert serve_with_retry(flaky, RetryPolicy(max_attempts=3)) == "ok"
+    with pytest.raises(RuntimeError):
+        serve_with_retry(lambda: 1 / 0, RetryPolicy(max_attempts=2))
+
+
+def test_iterative_retrieval_extends_prefix():
+    """Hop i+1 must hit the whole path hop i inserted (paper §9)."""
+    t = make_tree(gpu=10_000, host=10_000)
+    c = RAGController(t)
+    hops = run_iterative(
+        c,
+        retrieve_fn=lambda h: [10 + h],
+        doc_tokens_fn=lambda d: 100,
+        n_hops=3,
+        question_tokens=16,
+    )
+    # hop 0: all new; hop k: k cached docs
+    assert [h.alpha for h in hops] == [0, 100, 200]
+    assert [len(h.plan.hit_nodes) for h in hops] == [0, 1, 2]
+    # a second identical chain is a full hit
+    hops2 = run_iterative(c, lambda h: [10 + h], lambda d: 100, 3, 16)
+    assert hops2[-1].alpha == 300

@@ -1,0 +1,112 @@
+"""Knowledge tree + PGDSF unit & property tests (paper §5.1, Alg. 1)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.knowledge_tree import (EvictionError, KnowledgeTree, Node,
+                                       POLICIES)
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+
+
+def make_tree(gpu=1000, host=4000, policy="pgdsf"):
+    prof = CostProfiler.from_profile(A10G_MISTRAL_7B)
+    return KnowledgeTree(gpu, host, policy=policy, profiler=prof,
+                         bytes_per_token=1)
+
+
+def test_prefix_match_order_sensitivity():
+    t = make_tree()
+    n1, _ = t.insert(t.root, 1, 100)
+    n2, _ = t.insert(n1, 2, 100)
+    assert [n.doc_id for n in t.match_prefix([1, 2])] == [1, 2]
+    assert [n.doc_id for n in t.match_prefix([2, 1])] == []
+    assert [n.doc_id for n in t.match_prefix([1, 3])] == [1]
+    # same doc 2 under a different prefix is a distinct node
+    n3, _ = t.insert(t.root, 3, 100)
+    n4, _ = t.insert(n3, 2, 100)
+    assert n4 is not n2
+
+
+def test_swap_out_only_once():
+    t = make_tree(gpu=100, host=1000)   # GPU holds exactly one node
+    n1, _ = t.insert(t.root, 1, 100)
+    t.update_on_access(n1, False, 0, 100)
+    n2, _ = t.insert(t.root, 2, 100)    # evicts n1 -> host copy
+    t.update_on_access(n2, False, 0, 100)
+    assert t.stats["swap_out_bytes"] == 100
+    assert n1.in_host and n1.swapped_once and not n1.in_gpu
+    t.ensure_in_gpu([n1])               # promote n1 back (evicts n2, copy)
+    assert t.stats["swap_out_bytes"] == 200
+    t.evict_gpu(100, pinned=set())      # n1 evicted again: zero-copy free
+    assert t.stats["swap_out_skipped"] == 1
+    assert t.stats["swap_out_bytes"] == 200
+    assert n1.in_host and not n1.in_gpu
+
+
+def test_eviction_is_leaf_first():
+    """Paper §7.2: 'the knowledge tree always evicts the node furthest from
+    the root' — parents must outlive children in GPU."""
+    t = make_tree(gpu=300, host=0)
+    n1, _ = t.insert(t.root, 1, 100)
+    n2, _ = t.insert(n1, 2, 100)
+    n3, _ = t.insert(n2, 3, 100)
+    for n, beta in ((n1, 100), (n2, 100), (n3, 100)):
+        t.update_on_access(n, False, 0, beta)
+    t.insert(t.root, 9, 100)   # forces one eviction
+    assert not n3.in_gpu and n2.in_gpu and n1.in_gpu
+    t.check_invariants()
+
+
+def test_pgdsf_prefers_frequent_and_costly():
+    t = make_tree(gpu=200, host=0)
+    n1, _ = t.insert(t.root, 1, 100)
+    n2, _ = t.insert(t.root, 2, 100)
+    for _ in range(5):
+        t.update_on_access(n1, True, 100, 32)     # hot doc
+    t.update_on_access(n2, False, 0, 100)          # cold doc
+    t.insert(t.root, 3, 100)
+    assert n1.in_gpu and not n2.in_gpu
+
+
+def test_lru_policy_differs_from_lfu():
+    for policy, evicted_doc in (("lru", 1), ("lfu", 2)):
+        t = make_tree(gpu=200, host=0, policy=policy)
+        n1, _ = t.insert(t.root, 1, 100)
+        n2, _ = t.insert(t.root, 2, 100)
+        # doc1: frequent but stale; doc2: recent but rare
+        for _ in range(5):
+            t.update_on_access(n1, True, 100, 1)
+        t.update_on_access(n2, True, 100, 1)
+        t.insert(t.root, 3, 100)
+        victim = {1: n1, 2: n2}[evicted_doc]
+        assert not victim.in_gpu, policy
+
+
+def test_bilinear_interpolation():
+    prof = CostProfiler(
+        alphas=[0, 100], betas=[0, 100],
+        table={(0, 0): 0.0, (0, 100): 10.0, (100, 0): 0.0, (100, 100): 6.0})
+    assert prof.estimate(0, 50) == pytest.approx(5.0)
+    assert prof.estimate(100, 100) == pytest.approx(6.0)
+    assert prof.estimate(50, 100) == pytest.approx(8.0)
+    assert prof.estimate(50, 50) == pytest.approx(4.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 6), min_size=1, max_size=4),
+              st.integers(10, 120)),
+    min_size=1, max_size=60))
+def test_tree_invariants_under_random_workload(ops):
+    """Property: random plan/promote/insert sequences never violate tier
+    invariants or byte accounting."""
+    from repro.core.controller import RAGController
+    t = make_tree(gpu=500, host=800)
+    c = RAGController(t)
+    for doc_ids, tok in ops:
+        doc_ids = list(dict.fromkeys(doc_ids))  # dedupe, keep order
+        plan = c.plan(doc_ids, [tok] * len(doc_ids), 16)
+        c.promote(plan)
+        c.commit(plan)
+        t.check_invariants()
+    assert 0.0 <= c.doc_hit_rate <= 1.0

@@ -1,0 +1,140 @@
+"""Layer-level numerics: flash attention fwd/bwd vs naive, chunkwise mLSTM
+vs recurrent oracle, chunked_scan equivalence, MoE paths."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, off=0, window=0, cap=0.0):
+    B, Sq, H, hd = q.shape
+    R = H // k.shape[2]
+    kf = jnp.repeat(k, R, axis=2)
+    vf = jnp.repeat(v, R, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * hd ** -0.5
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = off + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(m[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vf)
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (17, 0.0), (0, 30.0)])
+def test_flash_forward(window, cap):
+    ks = jax.random.split(KEY, 3)
+    B, Sq, Skv, KV, R, hd = 2, 37, 53, 2, 3, 16
+    q = jax.random.normal(ks[0], (B, Sq, KV * R, hd))
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd))
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd))
+    off = Skv - Sq
+    o1 = L.flash_attention(q, k, v, q_offset=off, window=window,
+                           logit_cap=cap, q_chunk=16, kv_chunk=16)
+    o2 = naive_attention(q, k, v, off, window, cap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+def test_flash_backward():
+    ks = jax.random.split(KEY, 3)
+    B, Sq, Skv, KV, R, hd = 2, 24, 40, 2, 2, 16
+    q = jax.random.normal(ks[0], (B, Sq, KV * R, hd))
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd))
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd))
+    off = Skv - Sq
+
+    def f1(q, k, v):
+        return (L.flash_attention(q, k, v, q_offset=off, window=13,
+                                  logit_cap=30.0, q_chunk=8,
+                                  kv_chunk=8) ** 2).sum()
+
+    def f2(q, k, v):
+        return (naive_attention(q, k, v, off, 13, 30.0) ** 2).sum()
+
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(2, 40), chunk=st.integers(2, 16),
+       seed=st.integers(0, 100))
+def test_mlstm_chunkwise_matches_recurrent(S, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, H, hd = 2, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    h1, (C1, n1, m1) = L.mlstm_scan(q, k, v, ig, fg)
+    h2, (C2, n2, m2) = L.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+def test_mlstm_state_chaining():
+    """Processing [a;b] equals processing a then b from a's state — the
+    SSM document-caching correctness condition."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, hd = 1, 24, 2, 8
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    h_full, st_full = L.mlstm_chunkwise(q, k, v, ig, fg, chunk=8)
+    _, st_a = L.mlstm_chunkwise(q[:, :10], k[:, :10], v[:, :10],
+                                ig[:, :10], fg[:, :10], chunk=8)
+    h_b, st_b = L.mlstm_chunkwise(q[:, 10:], k[:, 10:], v[:, 10:],
+                                  ig[:, 10:], fg[:, 10:], state=st_a, chunk=8)
+    np.testing.assert_allclose(np.asarray(h_b), np.asarray(h_full[:, 10:]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_b[0]), np.asarray(st_full[0]),
+                               atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(1, 50), chunk=st.integers(1, 16))
+def test_chunked_scan_property(S, chunk):
+    def step(c, x):
+        return c * 0.9 + x, c + x
+    xs = jnp.arange(S, dtype=jnp.float32)
+    c1, y1 = jax.lax.scan(step, jnp.float32(0), xs)
+    c2, y2 = L.chunked_scan(step, jnp.float32(0), xs, chunk=chunk)
+    np.testing.assert_allclose(float(c1), float(c2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_moe_capacity_approximates_dense():
+    """With generous capacity no token drops: capacity == dense routing."""
+    ks = jax.random.split(KEY, 5)
+    B, S, D, E, F = 2, 16, 32, 4, 64
+    x = jax.random.normal(ks[0], (B, S, D), jnp.float32)
+    router = jax.random.normal(ks[1], (D, E)) * 0.5
+    wg = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    wu = jax.random.normal(ks[3], (E, D, F)) * 0.1
+    wd = jax.random.normal(ks[4], (E, F, D)) * 0.1
+    y1 = L.moe_dense(x, router, wg, wu, wd, top_k=2)
+    y2 = L.moe_capacity(x, router, wg, wu, wd, top_k=2,
+                        capacity_factor=4.0, token_chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_causal_conv_streaming():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (2, 12, 8))
+    w = jax.random.normal(ks[1], (4, 8))
+    y_full, _ = L.causal_conv1d(x, w)
+    y_a, st = L.causal_conv1d(x[:, :7], w)
+    y_b, _ = L.causal_conv1d(x[:, 7:], w, st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), atol=1e-5)

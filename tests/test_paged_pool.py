@@ -1,0 +1,70 @@
+"""Paged KV block pool: unit + hypothesis property tests."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kvcache.paged import BlockPool, OutOfBlocks, PagedKVStore
+
+
+def test_alloc_free_roundtrip():
+    p = BlockPool(8, 16)
+    a = p.alloc(3)
+    assert p.free_blocks == 5
+    p.decref(a)
+    assert p.free_blocks == 8
+    p.check()
+
+
+def test_refcount_sharing():
+    p = BlockPool(4, 16)
+    a = p.alloc(2)
+    p.incref(a)           # a second path shares these blocks
+    p.decref(a)
+    assert p.free_blocks == 2   # still held by the sharer
+    p.decref(a)
+    assert p.free_blocks == 4
+
+
+def test_out_of_blocks():
+    p = BlockPool(2, 16)
+    p.alloc(2)
+    with pytest.raises(OutOfBlocks):
+        p.alloc(1)
+
+
+def test_paged_store_roundtrip():
+    store = PagedKVStore(n_layers=2, n_blocks=8, block_size=4, n_kv=2,
+                         head_dim=8)
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(2, 1, 10, 2, 8)).astype(np.float32)
+    v = rng.normal(size=(2, 1, 10, 2, 8)).astype(np.float32)
+    seg = store.put(k, v)
+    k2, v2 = store.gather(seg)
+    np.testing.assert_allclose(np.asarray(k2), k)
+    np.testing.assert_allclose(np.asarray(v2), v)
+    store.free(seg)
+    assert store.pool.free_blocks == 8
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.one_of(
+    st.tuples(st.just("alloc"), st.integers(1, 4)),
+    st.tuples(st.just("free"), st.integers(0, 10)),
+), min_size=1, max_size=40))
+def test_pool_never_double_allocates(ops):
+    """Property: live segments never share blocks; accounting always exact."""
+    p = BlockPool(16, 4)
+    live = []
+    for op, arg in ops:
+        if op == "alloc":
+            try:
+                live.append(p.alloc(arg))
+            except OutOfBlocks:
+                pass
+        elif live:
+            seg = live.pop(arg % len(live))
+            p.decref(seg)
+        all_live = [b for seg in live for b in seg]
+        assert len(all_live) == len(set(all_live))
+        p.check()

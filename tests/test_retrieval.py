@@ -1,0 +1,51 @@
+"""Vector DB: staged-search semantics + retrieval-pattern characterization."""
+import numpy as np
+import pytest
+
+from repro.retrieval.corpus import access_cdf, make_corpus, make_workload
+from repro.retrieval.vectordb import FlatIndex, IVFIndex
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(300, embed_dim=16, seed=0)
+
+
+def test_staged_final_equals_full(corpus):
+    flat = FlatIndex(corpus.doc_vectors, n_stages=4)
+    ivf = IVFIndex(corpus.doc_vectors, n_clusters=16, nprobe=16)
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        q = rng.normal(size=16).astype(np.float32)
+        full = flat.search(q, 3)
+        stages = list(flat.staged_search(q, 3))
+        assert list(stages[-1].topk) == full
+        assert stages[-1].is_final and not stages[0].is_final
+        # IVF with all clusters probed must match exact search
+        ivf_stages = list(ivf.staged_search(q, 3))
+        assert list(ivf_stages[-1].topk) == full
+
+
+def test_staged_fraction_monotone(corpus):
+    flat = FlatIndex(corpus.doc_vectors, n_stages=5)
+    q = corpus.doc_vectors[0]
+    fr = [s.fraction_searched for s in flat.staged_search(q, 2)]
+    assert fr == sorted(fr) and fr[-1] <= 1.0
+
+
+def test_ivf_recall(corpus):
+    """IVF top-1 recall vs exact search — queries are near their target doc."""
+    ivf = IVFIndex(corpus.doc_vectors, n_clusters=16, nprobe=4)
+    wl = make_workload(corpus, n_requests=100, rate=10, seed=2)
+    hit = sum(ivf.search(r.query_vec, 1)[0] == r.target_doc for r in wl)
+    assert hit >= 85
+
+
+def test_retrieval_pattern_is_skewed(corpus):
+    """Paper §3.2 / Fig. 5: a small fraction of docs gets most accesses."""
+    wl = make_workload(corpus, n_requests=2000, rate=10, zipf_s=1.0, seed=3)
+    frac, cdf = access_cdf([r.target_doc for r in wl], 300)
+    top10pct = cdf[int(0.10 * 300)]
+    assert top10pct > 0.5, top10pct      # >>10% of accesses on top 10% docs
+    uniform = 0.10
+    assert top10pct > 3 * uniform

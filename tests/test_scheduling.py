@@ -1,0 +1,92 @@
+"""Cache-aware reordering (§5.2) + dynamic speculative pipelining (§5.3)."""
+import pytest
+
+from repro.core.reorder import ReorderQueue
+from repro.core.speculative import (SpecState, SpeculativeController,
+                                    staged_topk)
+
+
+def test_reorder_prefers_cached_requests():
+    q = ReorderQueue(window=10)
+    q.push("cold", cached_len=0, compute_len=100)
+    q.push("hot", cached_len=90, compute_len=10)
+    q.push("warm", cached_len=50, compute_len=50)
+    assert q.pop() == "hot"
+    assert q.pop() == "warm"
+    assert q.pop() == "cold"
+
+
+def test_reorder_scenario_figure10a():
+    """Paper Fig. 10a: prioritize larger cached contexts."""
+    q = ReorderQueue(window=10)
+    q.push("Q1", cached_len=2, compute_len=1)   # bigger cache
+    q.push("Q2", cached_len=1, compute_len=1)
+    assert q.pop() == "Q1"
+
+
+def test_reorder_scenario_figure10b():
+    """Paper Fig. 10b: same cache, prioritize shorter recomputation."""
+    q = ReorderQueue(window=10)
+    q.push("Q1", cached_len=2, compute_len=2)
+    q.push("Q2", cached_len=2, compute_len=1)   # shorter recompute
+    assert q.pop() == "Q2"
+
+
+def test_reorder_starvation_window():
+    q = ReorderQueue(window=3)
+    q.push("starved", cached_len=0, compute_len=100)
+    for i in range(8):
+        q.push(f"hot{i}", cached_len=100, compute_len=1)
+    popped = [q.pop() for _ in range(4)]
+    assert "starved" in popped, popped  # surfaced within window
+
+
+def test_reorder_disabled_is_fifo():
+    q = ReorderQueue(window=3, enabled=False)
+    q.push("a", 0, 100)
+    q.push("b", 100, 1)
+    assert q.pop() == "a"
+
+
+def test_dsp_launch_and_terminate():
+    """Algorithm 2: launch on change when pool has room; stale speculation
+    terminated; full pool defers."""
+    ctl = SpeculativeController(max_prefill_bs=2)
+    st = SpecState(0)
+    a, d = ctl.on_stage(st, (1, 3), pool_size=0)
+    assert a == "launch" and d == (1, 3)
+    a, _ = ctl.on_stage(st, (1, 3), pool_size=1)
+    assert a == "keep"
+    a, d = ctl.on_stage(st, (1, 2), pool_size=1)
+    assert a == "terminate_and_launch" and d == (1, 2)
+    assert st.wasted_launches == 1
+    # pool full, docs change again: terminate only
+    a, _ = ctl.on_stage(st, (1, 4), pool_size=2)
+    assert a == "terminate"
+    # final stage is always admitted (Theorem 5.1 case 3)
+    a, d = ctl.on_stage(st, (1, 5), pool_size=5, is_final=True)
+    assert a in ("launch", "terminate_and_launch") and d == (1, 5)
+    assert st.useful
+
+
+def test_dsp_matching_final_keeps_speculation():
+    """Paper Fig. 11: stage-2 docs equal the final docs -> speculation is
+    kept and the final stage confirms it (no re-generation)."""
+    ctl = SpeculativeController(max_prefill_bs=4)
+    st = SpecState(0)
+    stages = staged_topk(
+        [[(0.9, 1), (1.2, 3)], [(1.0, 2)], [(1.5, 4)], [(2.0, 5)]], k=2)
+    assert stages == [(1, 3), (1, 2), (1, 2), (1, 2)]
+    actions = []
+    for i, d in enumerate(stages):
+        a, _ = ctl.on_stage(st, d, 0, is_final=(i == len(stages) - 1))
+        actions.append(a)
+    assert actions == ["launch", "terminate_and_launch", "keep", "keep"]
+    assert st.useful and st.wasted_launches == 1
+
+
+def test_dsp_disabled_waits_for_final():
+    ctl = SpeculativeController(max_prefill_bs=4, enabled=False)
+    st = SpecState(0)
+    assert ctl.on_stage(st, (1,), 0)[0] == "none"
+    assert ctl.on_stage(st, (2,), 0, is_final=True)[0] == "launch"

@@ -1,0 +1,72 @@
+"""Discrete-event simulator: end-to-end behaviour + paper-trend assertions."""
+import numpy as np
+import pytest
+
+from repro.core.profiler import A10G_MISTRAL_7B
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.simulator import RAGSimulator, SimConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(1000, mean_doc_tokens=800, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=32, nprobe=8)
+    wl = make_workload(corpus, n_requests=150, rate=0.8, zipf_s=1.0, seed=1)
+    return corpus, idx, wl
+
+
+def run(setup, **kw):
+    corpus, idx, wl = setup
+    cfg = SimConfig(profile=A10G_MISTRAL_7B, **kw)
+    return RAGSimulator(cfg, corpus, idx, wl).run()
+
+
+def test_all_requests_complete(setup):
+    m = run(setup)
+    assert m.completed == 150
+    assert m.avg_ttft > 0 and m.p99_ttft >= m.p50_ttft
+
+
+def test_ragcache_beats_vllm_baseline(setup):
+    """Paper Fig. 13/14 trend: caching cuts TTFT vs no-cache vLLM."""
+    rag = run(setup)
+    vllm = run(setup, gpu_cache_bytes=0, host_cache_bytes=0,
+               reorder=False, speculative=False)
+    assert rag.avg_ttft < vllm.avg_ttft
+    assert rag.doc_hit_rate > 0.2 and vllm.doc_hit_rate == 0.0
+
+
+def test_ragcache_beats_gpu_only_lru(setup):
+    """Paper trend vs SGLang-like baseline (GPU-only cache, LRU)."""
+    rag = run(setup)
+    sgl = run(setup, host_cache_bytes=0, policy="lru",
+              reorder=False, speculative=False,
+              gpu_cache_bytes=2 * 2**30)
+    assert rag.doc_hit_rate >= sgl.doc_hit_rate
+    assert rag.avg_ttft <= sgl.avg_ttft * 1.05
+
+
+def test_pgdsf_beats_lru_hit_rate(setup):
+    """Paper Fig. 17: PGDSF >= LRU document hit rate at equal capacity."""
+    small = dict(gpu_cache_bytes=1 * 2**30, host_cache_bytes=4 * 2**30,
+                 reorder=False, speculative=False)
+    pg = run(setup, policy="pgdsf", **small)
+    lru = run(setup, policy="lru", **small)
+    assert pg.doc_hit_rate >= lru.doc_hit_rate - 0.01
+
+
+def test_dsp_reduces_non_overlap(setup):
+    """Paper Fig. 19 / Table 3: DSP shrinks non-overlapped search time."""
+    dsp = run(setup, speculative=True)
+    nod = run(setup, speculative=False)
+    assert dsp.avg_non_overlap_search <= nod.avg_non_overlap_search + 1e-9
+    assert nod.wasted_prefills == 0
+
+
+def test_cache_accounting_consistent(setup):
+    corpus, idx, wl = setup
+    cfg = SimConfig(profile=A10G_MISTRAL_7B)
+    sim = RAGSimulator(cfg, corpus, idx, wl)
+    sim.run()
+    sim.tree.check_invariants()

@@ -1,0 +1,43 @@
+"""Paper §8 features: TPOT metric + large-top-k cache truncation."""
+from repro.core.controller import RAGController
+from repro.core.knowledge_tree import KnowledgeTree
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.simulator import RAGSimulator, SimConfig
+
+
+def test_commit_max_docs_truncates():
+    t = KnowledgeTree(10_000, 10_000,
+                      profiler=CostProfiler.from_profile(A10G_MISTRAL_7B),
+                      bytes_per_token=1)
+    c = RAGController(t)
+    plan = c.plan([1, 2, 3, 4, 5], [10] * 5, 8)
+    c.commit(plan, max_docs=3)
+    assert len(t.match_prefix([1, 2, 3, 4, 5])) == 3
+    t.check_invariants()
+
+
+def test_tpot_metric_populated():
+    corpus = make_corpus(200, mean_doc_tokens=500, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=16, nprobe=4)
+    wl = make_workload(corpus, n_requests=40, rate=1.0, output_len_mean=6,
+                       seed=1)
+    m = RAGSimulator(SimConfig(profile=A10G_MISTRAL_7B), corpus, idx,
+                     wl).run()
+    assert m.avg_tpot > 0
+    assert m.avg_tpot < m.avg_ttft   # decode steps are far cheaper (paper §8)
+
+
+def test_cache_top_k_keeps_invariants():
+    corpus = make_corpus(300, mean_doc_tokens=500, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=16, nprobe=4)
+    wl = make_workload(corpus, n_requests=60, rate=1.0, seed=2)
+    sim = RAGSimulator(SimConfig(profile=A10G_MISTRAL_7B, top_k=5,
+                                 cache_top_k=3), corpus, idx, wl)
+    m = sim.run()
+    sim.tree.check_invariants()
+    # no tree path may be deeper than cache_top_k
+    for n in sim.tree.nodes():
+        assert len(n.path()) <= 3
+    assert m.completed == 60
