@@ -19,6 +19,7 @@ MODULES = [
     "fig18_reorder",
     "fig19_speculative",
     "tab4_sched_time",
+    "throughput_batching",
     "tpot_topk",
     "kernel_bench",
 ]

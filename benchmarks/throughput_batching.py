@@ -1,0 +1,104 @@
+"""Continuous batching vs sequential serving: throughput / TTFT sweep.
+
+Two sweeps:
+
+  * real execution (tiny reduced model, CPU): requests served through the
+    continuous-batching runtime at several decode-batch sizes vs the
+    sequential RAGServer — reports wall-clock throughput, mean TTFT and
+    decode-batch occupancy.  Run directly:
+
+        PYTHONPATH=src python benchmarks/throughput_batching.py --real
+
+  * simulator (paper-scale hardware profile): request rate x max_batch grid,
+    continuous iteration-level scheduling (the shared scheduler policy) —
+    this is the shape of paper Fig. 13's x-axis.  Default mode, and the
+    mode used by benchmarks/run.py (returns rows like the fig* modules).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import corpus_and_index, simulate, workload
+
+Row = tuple
+
+
+def run() -> List[Row]:
+    """Simulator sweep: requests/s x max_batch, continuous vs batch-1."""
+    corpus, idx = corpus_and_index()
+    rows: List[Row] = []
+    for rate in (0.5, 1.5, 3.0):
+        wl = workload(corpus, n=200, rate=rate, zipf=1.0, out_len=6, seed=23)
+        for max_batch in (1, 4, 8):
+            m, _ = simulate(corpus, idx, wl, max_batch=max_batch)
+            rows.append((
+                f"throughput/rate{rate}/batch{max_batch}",
+                m.avg_ttft * 1e6,
+                f"ttft={m.avg_ttft:.2f}s tpot={m.avg_tpot * 1e3:.0f}ms "
+                f"rps={m.throughput_rps:.2f}",
+            ))
+        base = [r for r in rows if f"rate{rate}/batch1" in r[0]][0]
+        best = [r for r in rows if f"rate{rate}/batch8" in r[0]][0]
+        rows.append((
+            f"throughput/rate{rate}/batch8_vs_1_ttft_speedup",
+            base[1] / max(best[1], 1e-9),
+            "continuous batching vs one-at-a-time",
+        ))
+    return rows
+
+
+def run_real(requests: int = 10, max_new: int = 4) -> None:
+    """Real-execution A/B on the reduced qwen2 model (slow: jit compiles)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.retrieval.corpus import make_corpus, make_workload
+    from repro.retrieval.vectordb import IVFIndex
+    from repro.serving.engine import RAGServer
+    from repro.serving.runtime import ContinuousRuntime
+
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_corpus(40, mean_doc_tokens=32, vocab=cfg.vocab_size, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=8, nprobe=4)
+    wl = make_workload(corpus, n_requests=requests, rate=100.0,
+                       question_tokens=8, vocab=cfg.vocab_size,
+                       zipf_s=1.2, seed=1)
+
+    print(f"{'mode':>14} {'wall_s':>7} {'req/s':>6} {'ttft_ms':>8} "
+          f"{'occupancy':>9}")
+    t0 = time.time()
+    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    seq = srv.serve(wl, max_new_tokens=max_new)
+    wall = time.time() - t0
+    ttft = float(np.mean([r.ttft for r in seq]))
+    print(f"{'sequential':>14} {wall:>7.1f} {len(seq) / wall:>6.2f} "
+          f"{ttft * 1e3:>8.1f} {'1.00':>9}")
+
+    for max_batch in (2, 4):
+        rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
+                               max_batch=max_batch)
+        t0 = time.time()
+        res = rt.serve(wl, max_new_tokens=max_new)
+        wall = time.time() - t0
+        s = rt.metrics.summary()
+        print(f"{f'cont(b={max_batch})':>14} {wall:>7.1f} "
+              f"{len(res) / wall:>6.2f} {s['ttft']['mean'] * 1e3:>8.1f} "
+              f"{s['mean_decode_batch']:>9.2f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true",
+                    help="real-execution A/B instead of the simulator sweep")
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+    if args.real:
+        run_real(requests=args.requests)
+    else:
+        for name, val, info in run():
+            print(f"{name:<45} {val:>12.1f}  {info}")

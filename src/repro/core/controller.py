@@ -76,17 +76,17 @@ class RAGController:
 
     def commit(self, plan: RequestPlan,
                payloads: Optional[Sequence[object]] = None,
-               max_docs: Optional[int] = None) -> float:
+               max_docs: Optional[int] = None) -> List[Node]:
         """After prefill: insert newly computed doc nodes (GPU tier), run
-        Alg. 1 UPDATE_NODE for every accessed doc, unpin. Returns swap-out
-        seconds incurred by insert-driven evictions.
+        Alg. 1 UPDATE_NODE for every accessed doc, unpin. Returns the list
+        of newly inserted nodes (in path order) so callers managing real
+        payload storage can reclaim payloads the tree did not take.
 
         max_docs (paper §8 "Large top-k"): cache only the first ``max_docs``
         documents of the sequence — permutation explosion makes deep tails
         unlikely to be reused, so trading tail coverage for cache space
         raises overall hit rate at large top-k."""
         tree = self.tree
-        cost = 0.0
         parent = plan.hit_nodes[-1] if plan.hit_nodes else tree.root
         pinned = set(plan.hit_nodes)
         new_nodes: List[Node] = []
@@ -95,12 +95,11 @@ class RAGController:
         for i in range(len(plan.hit_nodes), limit):
             payload = payloads[i - len(plan.hit_nodes)] if payloads else None
             try:
-                node, c = tree.insert(parent, plan.doc_ids[i],
+                node, _ = tree.insert(parent, plan.doc_ids[i],
                                       plan.doc_tokens[i], payload,
                                       pinned=pinned | set(new_nodes))
             except EvictionError:
                 break  # cache too small for this path — skip the tail
-            cost += c
             new_nodes.append(node)
             parent = node
         # Alg. 1 stat updates: every accessed doc node
@@ -110,7 +109,7 @@ class RAGController:
             tree.update_on_access(n, False, plan.alpha, plan.beta)
         for n in plan.hit_nodes:
             n.pinned = False
-        return cost
+        return new_nodes
 
     # ---- metrics ------------------------------------------------------------
 

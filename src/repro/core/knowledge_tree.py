@@ -225,17 +225,24 @@ class KnowledgeTree:
     def evict_gpu(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
         """Free >= required bytes of GPU tier. Returns transfer seconds spent
         on swap-outs. Raises EvictionError if impossible (all pinned)."""
+        return self.evict_gpu_until(
+            lambda: self.gpu_used + required <= self.gpu_capacity, pinned)
+
+    def evict_gpu_until(self, done: Callable[[], bool],
+                        pinned: Optional[Set[Node]] = None) -> float:
+        """Alg. 1 EVICT_IN_GPU driven by an arbitrary stop condition —
+        shared by the byte-budget loop above and external resource reclaim
+        (e.g. the runtime freeing paged-pool blocks). Raises EvictionError
+        if ``done()`` is still false with no evictable leaf left."""
         pinned = pinned or set()
         cost = 0.0
-        freed = 0
-        while self.gpu_used + required > self.gpu_capacity:
+        while not done():
             leaves = self._tier_leaves("gpu", pinned)
             if not leaves:
                 raise EvictionError("GPU cache thrash: all nodes pinned")
             victim = min(leaves, key=lambda n: n.priority)
             self.gpu_clock = max(self.gpu_clock, victim.priority)
             cost += self._demote(victim)
-            freed += victim.bytes_
             self.stats["gpu_evictions"] += 1
         return cost
 

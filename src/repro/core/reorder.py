@@ -47,25 +47,52 @@ class ReorderQueue(Generic[T]):
         for e in self._entries:
             e.cached_len, e.compute_len = fn(e.item)
 
-    def pop(self) -> Optional[T]:
-        if not self._entries:
+    def pop(self, viable: Optional[Callable[[T], bool]] = None) -> Optional[T]:
+        """Remove and return the best entry. ``viable`` restricts the
+        candidate set (e.g. admission control) without disturbing the
+        queue position of non-viable entries."""
+        cands = (self._entries if viable is None
+                 else [e for e in self._entries if viable(e.item)])
+        if not cands:
             return None
         if not self.enabled:
-            best = min(self._entries, key=lambda e: e.seq)
+            best = min(cands, key=lambda e: e.seq)
         else:
             # starvation guard: anything skipped >= window times goes first
-            starved = [e for e in self._entries if e.skipped >= self.window]
+            starved = [e for e in cands if e.skipped >= self.window]
             if starved:
                 best = min(starved, key=lambda e: e.seq)
             else:
                 best = max(
-                    self._entries,
+                    cands,
                     key=lambda e: (e.order_priority, -e.seq),
                 )
         self._entries.remove(best)
         for e in self._entries:
             e.skipped += 1
         return best.item
+
+    def bump_skipped(self, pred: Optional[Callable[[T], bool]] = None) -> None:
+        """Count a scheduling round that passed (pred-matching) entries over
+        without popping anything — admission-blocked rounds must still age
+        entries toward the starvation window."""
+        for e in self._entries:
+            if pred is None or pred(e.item):
+                e.skipped += 1
+
+    def prune(self, drop: Callable[[T], bool]) -> int:
+        """Remove entries for which ``drop(item)`` is true (cancelled
+        speculations, finished requests). Returns how many were removed."""
+        before = len(self._entries)
+        self._entries = [e for e in self._entries if not drop(e.item)]
+        return before - len(self._entries)
+
+    def max_skipped(self, viable: Optional[Callable[[T], bool]] = None) -> int:
+        """Largest skip count among (viable) entries — the scheduler's
+        preemption trigger reads this to detect starving admissions."""
+        cands = (self._entries if viable is None
+                 else [e for e in self._entries if viable(e.item)])
+        return max((e.skipped for e in cands), default=-1)
 
     def peek_all(self) -> List[T]:
         return [e.item for e in self._entries]

@@ -60,6 +60,11 @@ class BlockPool:
             if self._ref[b] == 0:
                 self._free.append(b)
 
+    def exclusive(self, blocks: Sequence[int]) -> int:
+        """How many of ``blocks`` have refcount 1 — i.e. would actually
+        return to the free list if their sole owner dropped them."""
+        return int(sum(1 for b in blocks if self._ref[b] == 1))
+
     def check(self) -> None:
         live = int((self._ref > 0).sum())
         assert live + len(self._free) == self.n_blocks
@@ -91,10 +96,14 @@ class PagedKVStore:
         L, _, _, KV, hd = self.k.shape
         return int(2 * L * KV * hd * self.k.dtype.itemsize)
 
-    def put(self, k_seg, v_seg) -> "PagedSegment":
-        """k_seg/v_seg: (L, 1, T, KV, hd) contiguous -> paged blocks."""
+    def put(self, k_seg, v_seg, reserve_tokens: int = 0) -> "PagedSegment":
+        """k_seg/v_seg: (L, 1, T, KV, hd) contiguous -> paged blocks.
+
+        reserve_tokens: allocate capacity for this many *extra* tokens beyond
+        T (the serving runtime's decode step writes appended tokens into the
+        reserved tail slots through the request's block table)."""
         T = k_seg.shape[2]
-        nb = self.pool.blocks_for_tokens(T)
+        nb = self.pool.blocks_for_tokens(T + reserve_tokens)
         blocks = self.pool.alloc(nb)
         pad = nb * self.block_size - T
         if self.device:
@@ -111,6 +120,8 @@ class PagedKVStore:
             for bi, b in enumerate(blocks):
                 lo = bi * self.block_size
                 hi = min(lo + self.block_size, T)
+                if hi <= lo:            # reserve-only tail block
+                    break
                 self.k[:, b, : hi - lo] = k_seg[:, 0, lo:hi]
                 self.v[:, b, : hi - lo] = v_seg[:, 0, lo:hi]
         return PagedSegment(self, blocks, T)
@@ -128,6 +139,14 @@ class PagedKVStore:
 
     def free(self, seg: "PagedSegment") -> None:
         self.pool.decref(seg.blocks)
+
+    def share(self, seg: "PagedSegment") -> None:
+        """Refcount a segment's blocks for an additional reader (e.g. a
+        running request's block table pointing at knowledge-tree blocks)."""
+        self.pool.incref(seg.blocks)
+
+    def release(self, blocks: Sequence[int]) -> None:
+        self.pool.decref(blocks)
 
 
 @dataclasses.dataclass

@@ -25,7 +25,8 @@ from pathlib import Path
 import jax
 
 from repro.configs import ASSIGNED, get_config
-from repro.launch.hlo_analysis import COLLECTIVES, analyze
+from repro.launch.hlo_analysis import (COLLECTIVES, analyze,
+                                       normalize_cost_analysis)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, input_specs, shape_applicable
 
@@ -155,7 +156,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             totals = analyze(compiled.as_text())
         rl = roofline(totals, cost or {}, n_chips, cfg, shape_name)
         rec.update(

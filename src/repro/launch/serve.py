@@ -1,13 +1,21 @@
-"""End-to-end RAG serving driver (deliverable (b)): builds a corpus + vector
-index, instantiates a model, and serves a batched Poisson workload through
-the full RAGCache pipeline (staged retrieval -> knowledge tree -> prefix
-prefill -> decode), printing per-request TTFT and cache statistics.
+"""End-to-end RAG serving driver: builds a corpus + vector index,
+instantiates a model, and serves a batched Poisson workload through the full
+RAGCache pipeline (staged retrieval -> knowledge tree -> prefix prefill ->
+decode), printing TTFT/TPOT percentiles and cache statistics.
+
+Default mode is the continuous-batching runtime (iteration-level scheduling,
+paged batched decode, retrieval/prefill overlap — ``serving.runtime``);
+``--sequential`` serves through the old one-request-at-a-time ``RAGServer``
+for A/B comparison, and ``--check-tokens`` runs BOTH and asserts the greedy
+tokens are identical.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-        --requests 12 --docs 50 --top-k 2 [--policy lru] [--no-reorder]
+        --requests 12 --docs 50 --top-k 2 [--policy lru] [--no-reorder] \
+        [--sequential] [--check-tokens]
 
 Uses the reduced config (CPU-sized); the production configs are exercised
-through launch/dryrun.py.
+through launch/dryrun.py.  SSM/hybrid families always use the sequential
+engine (recurrent state cannot be paged per-block).
 """
 from __future__ import annotations
 
@@ -22,9 +30,10 @@ from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.vectordb import IVFIndex
 from repro.serving.engine import RAGServer
+from repro.serving.runtime import ContinuousRuntime
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=12)
@@ -36,35 +45,110 @@ def main() -> None:
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--no-spec", action="store_true")
     ap.add_argument("--max-new-tokens", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode-batch slots (continuous mode)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged-KV block size in tokens (continuous mode)")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--search-scale", type=float, default=1.0,
+                    help="scale staged-search stage durations (emulate "
+                         "paper-scale 78-446 ms searches on a tiny corpus)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="serve through the old one-at-a-time RAGServer")
+    ap.add_argument("--check-tokens", action="store_true",
+                    help="run both engines and assert identical tokens")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
+
+def make_setup(args):
     cfg = get_reduced(args.arch)
-    print(f"model={cfg.name} family={cfg.family} layers={cfg.n_layers} "
-          f"d_model={cfg.d_model}")
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     corpus = make_corpus(args.docs, mean_doc_tokens=args.doc_tokens,
                          vocab=cfg.vocab_size, seed=args.seed)
     idx = IVFIndex(corpus.doc_vectors, n_clusters=min(16, args.docs),
                    nprobe=8)
+    wl = make_workload(corpus, n_requests=args.requests, rate=args.rate,
+                       question_tokens=8, vocab=cfg.vocab_size,
+                       zipf_s=1.2, seed=args.seed + 1)
+    return cfg, params, corpus, idx, wl
+
+
+def serve_sequential(cfg, params, corpus, idx, wl, args):
     srv = RAGServer(cfg, params, corpus, idx, top_k=args.top_k,
                     policy=args.policy, reorder=not args.no_reorder,
                     speculative=not args.no_spec)
-    wl = make_workload(corpus, n_requests=args.requests, rate=100.0,
-                       question_tokens=8, vocab=cfg.vocab_size,
-                       zipf_s=1.2, seed=args.seed + 1)
     t0 = time.time()
     results = srv.serve(wl, max_new_tokens=args.max_new_tokens)
     wall = time.time() - t0
-    print(f"\nserved {len(results)} requests in {wall:.1f}s "
+    results = sorted(results, key=lambda r: r.req_id)
+    print(f"\n[sequential] served {len(results)} requests in {wall:.1f}s "
           f"(incl. jit compiles)")
     print(f"{'req':>4} {'docs':>12} {'alpha':>6} {'beta':>5} "
           f"{'ttft_ms':>8}  tokens")
     for r in results:
         print(f"{r.req_id:>4} {str(r.docs):>12} {r.alpha:>6} {r.beta:>5} "
               f"{r.ttft * 1000:>8.1f}  {r.tokens}")
-    print(f"\ndoc hit rate: {srv.controller.doc_hit_rate:.2%}")
+    ttfts = np.asarray([r.ttft for r in results])
+    print(f"mean TTFT {ttfts.mean() * 1e3:.1f} ms  "
+          f"(search+transfer+prefill summed serially)")
+    print(f"doc hit rate: {srv.controller.doc_hit_rate:.2%}")
     print(f"tree stats: {srv.tree.stats}")
+    return results
+
+
+def serve_continuous(cfg, params, corpus, idx, wl, args):
+    rt = ContinuousRuntime(
+        cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
+        reorder=not args.no_reorder, speculative=not args.no_spec,
+        max_batch=args.max_batch, block_size=args.block_size,
+        search_time_scale=args.search_scale)
+    t0 = time.time()
+    results = rt.serve(wl, max_new_tokens=args.max_new_tokens)
+    wall = time.time() - t0
+    print(f"\n[continuous] served {len(results)} requests in {wall:.1f}s "
+          f"wall (incl. jit compiles)")
+    print(f"{'req':>4} {'docs':>12} {'alpha':>6} {'beta':>5} "
+          f"{'ttft_ms':>8} {'spec':>5}  tokens")
+    for r in results:
+        print(f"{r.req_id:>4} {str(r.docs):>12} {r.alpha:>6} {r.beta:>5} "
+              f"{r.ttft * 1000:>8.1f} {'hit' if r.speculative_hit else '':>5}"
+              f"  {r.tokens}")
+    print()
+    print(rt.metrics.format_report())
+    print(f"tree stats: {rt.tree.stats}")
+    return results
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    cfg, params, corpus, idx, wl = make_setup(args)
+    print(f"model={cfg.name} family={cfg.family} layers={cfg.n_layers} "
+          f"d_model={cfg.d_model}")
+
+    recurrent = cfg.family in ("ssm", "hybrid")
+    if recurrent and not args.sequential:
+        print("note: recurrent-state family -> sequential engine")
+    if recurrent and args.check_tokens:
+        print("note: --check-tokens unavailable for recurrent families "
+              "(no continuous engine to compare against); NOT checked")
+    if args.check_tokens and not recurrent:
+        cont = serve_continuous(cfg, params, corpus, idx, wl, args)
+        seq = serve_sequential(cfg, params, corpus, idx, wl, args)
+        mismatches = [
+            (a.req_id, a.tokens, b.tokens)
+            for a, b in zip(cont, sorted(seq, key=lambda r: r.req_id))
+            if list(a.tokens) != list(b.tokens)
+        ]
+        if mismatches:
+            raise SystemExit(f"token mismatch: {mismatches}")
+        print(f"\ntoken check: all {len(cont)} requests identical "
+              f"(continuous == sequential)")
+    elif args.sequential or recurrent:
+        serve_sequential(cfg, params, corpus, idx, wl, args)
+    else:
+        serve_continuous(cfg, params, corpus, idx, wl, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,175 @@
+"""Per-request serving telemetry for the continuous-batching runtime.
+
+Each request gets a ``RequestTimeline`` of absolute timestamps on the
+runtime's clock (arrival, retrieval stages, prefill, first token, decode
+tokens).  ``ServingMetrics`` aggregates timelines plus per-iteration engine
+records into the paper's headline numbers — TTFT / TPOT / queueing-time
+percentiles, decode-batch occupancy, and retrieval-overlap accounting (how
+much of the staged vector search was hidden behind speculative prefill,
+§5.3 / Fig. 19).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestTimeline:
+    req_id: int
+    arrival: float
+    search_start: float = -1.0
+    search_end: float = -1.0
+    # first time *any* prefill (speculative or final) for the finally-chosen
+    # document set started — the overlap credit (paper Fig. 19)
+    final_prefill_start: float = -1.0
+    prefill_end: float = -1.0
+    queue_enter: float = -1.0          # final docs queued for the engine
+    first_token: float = -1.0
+    finish: float = -1.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # cache accounting
+    alpha: int = 0                     # cached prefix tokens
+    beta: int = 0                      # computed tokens
+    hit_docs: int = 0
+    n_docs: int = 0
+    speculative_hit: bool = False      # final docs matched a live speculation
+    preemptions: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    docs: tuple = ()
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival if self.first_token >= 0 else -1.0
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (paper §8)."""
+        if not self.token_times or self.first_token < 0:
+            return 0.0
+        return (self.token_times[-1] - self.first_token) / len(self.token_times)
+
+    @property
+    def queueing(self) -> float:
+        """Final-docs queue entry -> prefill start (scheduling delay)."""
+        if self.queue_enter < 0 or self.final_prefill_start < 0:
+            return 0.0
+        return max(0.0, self.final_prefill_start - self.queue_enter)
+
+    @property
+    def search_time(self) -> float:
+        if self.search_end < 0:
+            return 0.0
+        return self.search_end - self.search_start
+
+    @property
+    def non_overlapped_search(self) -> float:
+        """Portion of the staged search NOT hidden behind a prefill of the
+        final document set. Sequential serving: == search_time."""
+        dur = self.search_time
+        if self.final_prefill_start < 0:
+            return dur
+        overlap = max(0.0, self.search_end
+                      - max(self.search_start, self.final_prefill_start))
+        return max(0.0, dur - min(overlap, dur))
+
+
+def percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p90": float(np.percentile(a, 90)),
+        "p99": float(np.percentile(a, 99)),
+        "max": float(a.max()),
+    }
+
+
+class ServingMetrics:
+    """Aggregator owned by the runtime; the benchmark and launch driver read
+    ``summary()`` / ``format_report()``."""
+
+    def __init__(self):
+        self.timelines: Dict[int, RequestTimeline] = {}
+        # per engine iteration: ("prefill", 1) or ("decode", batch_size)
+        self.iterations: List[tuple] = []
+        self.wasted_prefills = 0
+        self.spec_prefills = 0
+        self.preemptions = 0
+        self.blocks_shared = 0         # tree blocks refcounted into tables
+        self.blocks_copied = 0         # unaligned doc tokens re-put privately
+
+    def timeline(self, req_id: int, arrival: float) -> RequestTimeline:
+        tl = self.timelines.get(req_id)
+        if tl is None:
+            tl = RequestTimeline(req_id=req_id, arrival=arrival)
+            self.timelines[req_id] = tl
+        return tl
+
+    def record_iteration(self, kind: str, batch: int) -> None:
+        self.iterations.append((kind, batch))
+
+    # ---- aggregation ------------------------------------------------------
+
+    def completed(self) -> List[RequestTimeline]:
+        return [t for t in self.timelines.values() if t.first_token >= 0]
+
+    def summary(self) -> Dict[str, object]:
+        done = self.completed()
+        decode_batches = [b for k, b in self.iterations if k == "decode"]
+        n_prefills = sum(1 for k, _ in self.iterations if k == "prefill")
+        spec_hits = sum(1 for t in done if t.speculative_hit)
+        return {
+            "completed": len(done),
+            "ttft": percentiles([t.ttft for t in done]),
+            "tpot": percentiles([t.tpot for t in done if t.token_times]),
+            "queueing": percentiles([t.queueing for t in done]),
+            "search": percentiles([t.search_time for t in done]),
+            "non_overlapped_search": percentiles(
+                [t.non_overlapped_search for t in done]),
+            "decode_iterations": len(decode_batches),
+            "prefill_iterations": n_prefills,
+            "mean_decode_batch": (float(np.mean(decode_batches))
+                                  if decode_batches else 0.0),
+            "max_decode_batch": max(decode_batches, default=0),
+            "speculative_hits": spec_hits,
+            "speculative_prefills": self.spec_prefills,
+            "wasted_prefills": self.wasted_prefills,
+            "preemptions": self.preemptions,
+            "blocks_shared": self.blocks_shared,
+            "blocks_copied": self.blocks_copied,
+            "doc_hit_rate": (sum(t.hit_docs for t in done)
+                             / max(sum(t.n_docs for t in done), 1)),
+        }
+
+    def format_report(self) -> str:
+        s = self.summary()
+
+        def ms(p):
+            return (f"mean {p['mean'] * 1e3:7.1f}  p50 {p['p50'] * 1e3:7.1f}"
+                    f"  p90 {p['p90'] * 1e3:7.1f}  p99 {p['p99'] * 1e3:7.1f}")
+
+        lines = [
+            f"completed requests      : {s['completed']}",
+            f"TTFT (ms)               : {ms(s['ttft'])}",
+            f"TPOT (ms)               : {ms(s['tpot'])}",
+            f"queueing (ms)           : {ms(s['queueing'])}",
+            f"search (ms)             : {ms(s['search'])}",
+            f"non-overlapped search   : {ms(s['non_overlapped_search'])}",
+            f"engine iterations       : {s['prefill_iterations']} prefill / "
+            f"{s['decode_iterations']} decode",
+            f"decode batch occupancy  : mean {s['mean_decode_batch']:.2f} "
+            f"max {s['max_decode_batch']}",
+            f"speculation             : {s['speculative_hits']} hits / "
+            f"{s['speculative_prefills']} launched / "
+            f"{s['wasted_prefills']} wasted",
+            f"preemptions             : {s['preemptions']}",
+            f"paged blocks            : {s['blocks_shared']} shared / "
+            f"{s['blocks_copied']} copied",
+            f"doc hit rate            : {s['doc_hit_rate']:.2%}",
+        ]
+        return "\n".join(lines)

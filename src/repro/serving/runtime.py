@@ -1,0 +1,664 @@
+"""Continuous-batching async serving runtime (real execution).
+
+This is the event-loop engine the paper's serving numbers assume and the
+sequential ``RAGServer`` lacks: iteration-level scheduling over many
+concurrent requests, with
+
+  * staged vector search running OFF the engine's critical path — each
+    request's search stages are events on the runtime clock, and the
+    ``SpeculativeController``'s per-stage decisions actually launch and
+    terminate speculative prefills that overlap the remaining search
+    (paper §5.3, Algorithm 2);
+  * one engine iteration at a time: a single (possibly speculative) prefill
+    picked by the cache-aware ``ReorderQueue``, or ONE batched decode step
+    for every running request;
+  * batched decode through the ``PagedKVStore``: each running request owns a
+    block table; knowledge-tree document segments are REFCOUNT-SHARED into
+    the table when block-aligned (copied into private blocks otherwise), and
+    every iteration does one block-table gather + one token scatter;
+  * admission control and preemption by paged-block / tree-pin budget via
+    the shared ``ContinuousBatchScheduler`` (the same policy object the
+    discrete-event simulator executes).
+
+Clock semantics: the runtime keeps a virtual clock (seconds).  Engine
+iterations advance it by their *measured* wall time (real JAX compute;
+prefill shapes still jit-compile on first occurrence); retrieval stages
+advance their own per-request lanes by max(measured stage wall time,
+analytic stage cost) — search runs on host CPUs concurrently with the
+accelerator, which is the paper's testbed overlap model.  TTFT is therefore
+max(search_end, prefill_end) - arrival, NOT the serial sum the sequential
+engine reports.
+
+Families: attention-only (dense / moe / vlm).  SSM and hybrid recurrent
+state cannot be paged per-block; serve those through the sequential engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import RAGController
+from repro.core.knowledge_tree import (CacheBackend, EvictionError,
+                                       KnowledgeTree)
+from repro.core.profiler import CostProfiler
+from repro.core.speculative import SpecState, SpeculativeController
+from repro.kvcache.paged import OutOfBlocks, PagedKVStore
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.retrieval.corpus import Corpus, Request
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import (DECODE, PREEMPT, PREFILL,
+                                     ContinuousBatchScheduler, PagedAdmission,
+                                     SchedulerConfig)
+
+WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+
+
+class _PagedBackend(CacheBackend):
+    """Tree payloads are PagedSegments in the shared device store; the host
+    tier holds dense numpy copies. Transfer seconds are measured."""
+
+    def __init__(self, store: PagedKVStore):
+        self.store = store
+
+    def swap_out(self, node):
+        t0 = time.perf_counter()
+        k, v = self.store.gather(node.payload_gpu)
+        node.payload_host = {"k": np.asarray(k), "v": np.asarray(v)}
+        return time.perf_counter() - t0
+
+    def load(self, node):
+        t0 = time.perf_counter()
+        try:
+            node.payload_gpu = self.store.put(
+                jnp.asarray(node.payload_host["k"]),
+                jnp.asarray(node.payload_host["v"]))
+        except OutOfBlocks as e:
+            raise EvictionError(str(e))   # promote() degrades to recompute
+        jax.block_until_ready(self.store.k)
+        return time.perf_counter() - t0
+
+    def free_gpu(self, node):
+        if node.payload_gpu is not None:
+            self.store.free(node.payload_gpu)
+        node.payload_gpu = None
+
+
+@dataclasses.dataclass
+class _PrefillResult:
+    docs: Tuple[int, ...]
+    cache: dict                     # dense full-sequence cache (L, 1, T, ...)
+    first_token: int
+    total_len: int
+    alpha: int
+    beta: int
+    hit_docs: int
+    speculative: bool
+    started: float
+
+
+@dataclasses.dataclass
+class _Job:
+    req: "_ReqRun"
+    docs: Tuple[int, ...]
+    speculative: bool
+    enqueued: float
+    cancelled: bool = False
+    started: float = -1.0
+
+
+@dataclasses.dataclass
+class _ReqRun:
+    r: Request
+    tl: object                      # RequestTimeline
+    spec: SpecState
+    state: str = WAITING
+    final_docs: Optional[Tuple[int, ...]] = None
+    jobs: List[_Job] = dataclasses.field(default_factory=list)
+    results: Dict[Tuple[int, ...], _PrefillResult] = dataclasses.field(
+        default_factory=dict)
+    start_by_docs: Dict[Tuple[int, ...], float] = dataclasses.field(
+        default_factory=dict)
+    # decode state
+    table: List[int] = dataclasses.field(default_factory=list)
+    owned_blocks: List[int] = dataclasses.field(default_factory=list)
+    length: int = 0
+    last_tok: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    req_id: int
+    tokens: List[int]
+    ttft: float
+    docs: Tuple[int, ...]
+    alpha: int
+    beta: int
+    speculative_hit: bool
+
+
+class ContinuousRuntime:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        corpus: Corpus,
+        index,
+        *,
+        gpu_cache_bytes: int = 64 * 2**20,
+        host_cache_bytes: int = 512 * 2**20,
+        policy: str = "pgdsf",
+        top_k: int = 2,
+        reorder: bool = True,
+        reorder_window: int = 32,
+        speculative: bool = True,
+        max_batch: int = 4,
+        max_prefill_bs: int = 4,
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
+        search_time_scale: float = 1.0,
+        profiler: Optional[CostProfiler] = None,
+    ):
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                "recurrent-state families cannot be paged per-block; "
+                "use the sequential RAGServer for ssm/hybrid")
+        self.cfg = cfg
+        self.params = params
+        self.corpus = corpus
+        self.index = index
+        self.top_k = top_k
+        self.search_time_scale = search_time_scale
+        kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+                    * jnp.dtype(cfg.jdtype).itemsize)
+        if n_blocks is None:
+            n_blocks = int(np.clip(
+                gpu_cache_bytes // (block_size * kv_bytes) + 64, 128, 4096))
+        self.store = PagedKVStore(cfg.n_layers, n_blocks, block_size,
+                                  cfg.n_kv_heads, cfg.hd,
+                                  dtype=cfg.jdtype, device=True)
+        self._scratch_block = self.store.pool.alloc(1)[0]  # dummy-row sink
+        self.tree = KnowledgeTree(
+            gpu_cache_bytes, host_cache_bytes, policy=policy,
+            profiler=profiler or CostProfiler.from_fn(
+                lambda a, b: 1e-4 * b + 2e-8 * b * (a + b),
+                (0, 64, 256, 1024), (1, 32, 128, 512, 1024)),
+            backend=_PagedBackend(self.store), bytes_per_token=max(kv_bytes, 1),
+        )
+        self.controller = RAGController(self.tree)
+        self.spec_ctl = SpeculativeController(max_prefill_bs,
+                                              enabled=speculative)
+        self.max_new_tokens = 4       # refined per serve()
+        self.admission = PagedAdmission(self.store.pool, self.tree,
+                                        decode_reserve=self.max_new_tokens)
+        self.sched: ContinuousBatchScheduler[_Job] = ContinuousBatchScheduler(
+            SchedulerConfig(max_batch=max_batch,
+                            max_prefill_bs=max_prefill_bs,
+                            reorder=reorder, reorder_window=reorder_window),
+            viable=self._job_viable, admit=self._job_admissible)
+        self.metrics = ServingMetrics()
+        self._prefill_fn = jax.jit(
+            lambda p, toks, pc, pl: M.prefill(cfg, p, {"tokens": toks},
+                                              prefix_cache=pc, prefix_len=pl),
+            static_argnames=("pl",))
+        self._decode_fn = None        # built in serve() once n_slots is known
+        self._n_slots = 0
+        # event loop
+        self.now = 0.0
+        self._events: List = []
+        self._seq = itertools.count()
+        self.engine_busy = False
+        self.running: List[_ReqRun] = []   # decode-stage requests, FIFO
+        self._force_decode = False         # progress guard after a
+                                           # pagination failure (see below)
+        self._all: List[_ReqRun] = []
+
+    # ------------------------------------------------------------------
+    # scheduler callbacks
+    # ------------------------------------------------------------------
+
+    def _job_viable(self, job: _Job) -> bool:
+        return not job.cancelled and job.req.state == WAITING
+
+    def _job_ctx_beta(self, job: _Job) -> Tuple[int, int]:
+        ctx = (sum(int(self.corpus.doc_lengths[d]) for d in job.docs)
+               + len(job.req.r.question_tokens))
+        hit = self.tree.match_prefix(job.docs)
+        cached = sum(n.n_tokens for n in hit)
+        return ctx, max(ctx - cached, 1)
+
+    def _job_admissible(self, job: _Job) -> bool:
+        ctx, beta = self._job_ctx_beta(job)
+        return self.admission.admissible(ctx, beta)
+
+    def _job_lens(self, job: _Job) -> Tuple[int, int]:
+        ctx, beta = self._job_ctx_beta(job)
+        return ctx - beta, beta
+
+    # ------------------------------------------------------------------
+    # event plumbing
+    # ------------------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    # ------------------------------------------------------------------
+    # serve
+    # ------------------------------------------------------------------
+
+    def serve(self, requests: Sequence[Request],
+              max_new_tokens: int = 4) -> List[RuntimeResult]:
+        self.max_new_tokens = max_new_tokens
+        self.admission.decode_reserve = max_new_tokens
+        max_doc = int(max(self.corpus.doc_lengths))
+        max_q = max((len(r.question_tokens) for r in requests), default=8)
+        max_ctx = self.top_k * max_doc + max_q + max_new_tokens
+        n_slots = self.store.pool.blocks_for_tokens(max_ctx) + 1
+        if n_slots > self.store.pool.n_blocks - 1:
+            raise ValueError(
+                f"paged pool too small: a worst-case request needs "
+                f"{n_slots - 1} blocks but the pool has "
+                f"{self.store.pool.n_blocks - 1} usable; raise n_blocks or "
+                f"lower top_k/doc length")
+        if n_slots != self._n_slots or self._decode_fn is None:
+            self._n_slots = n_slots
+            self._build_decode_fn()
+        first = len(self._all)
+        for r in requests:
+            self._push(max(r.arrival, self.now), "arrival", r)
+        while self._events:
+            self.now, _, kind, payload = heapq.heappop(self._events)
+            getattr(self, f"_on_{kind}")(payload)
+        unserved = [st.r.req_id for st in self._all[first:]
+                    if st.state != FINISHED]
+        if unserved:
+            raise RuntimeError(
+                f"requests {unserved} were never served (admission-starved "
+                f"to the end of the event loop — pool or tree budget too "
+                f"small for the workload)")
+        out = []
+        for st in self._all[first:]:
+            out.append(RuntimeResult(
+                req_id=st.r.req_id, tokens=list(st.tokens), ttft=st.tl.ttft,
+                docs=st.final_docs or (), alpha=st.tl.alpha, beta=st.tl.beta,
+                speculative_hit=st.tl.speculative_hit))
+        out.sort(key=lambda x: x.req_id)
+        return out
+
+    # ------------------------------------------------------------------
+    # arrivals & staged retrieval (host-CPU lanes, one per request)
+    # ------------------------------------------------------------------
+
+    def _on_arrival(self, r: Request) -> None:
+        tl = self.metrics.timeline(next(self._seq), self.now)
+        tl.req_id = r.req_id
+        tl.search_start = self.now
+        st = _ReqRun(r=r, tl=tl, spec=SpecState(r.req_id),
+                     remaining=self.max_new_tokens)
+        self._all.append(st)
+        # materialize stages, measuring the real scan cost of each stage;
+        # the per-request search lane advances by max(measured, analytic)
+        t = self.now
+        it = iter(self.index.staged_search(r.query_vec, self.top_k))
+        while True:
+            t0 = time.perf_counter()
+            try:
+                stage = next(it)
+            except StopIteration:
+                break
+            wall = time.perf_counter() - t0
+            t += max(wall, stage.seconds) * self.search_time_scale
+            self._push(t, "stage", (st, stage))
+
+    def _on_stage(self, payload) -> None:
+        st, stage = payload
+        docs = tuple(stage.topk)
+        if stage.is_final:
+            st.tl.search_end = self.now
+            st.final_docs = docs
+        action, d = self.spec_ctl.on_stage(
+            st.spec, docs, self.sched.pool_size(), is_final=stage.is_final)
+        if action in ("terminate_and_launch", "terminate"):
+            for job in st.jobs:
+                if not job.cancelled and job.docs != docs:
+                    job.cancelled = True
+        if action in ("launch", "terminate_and_launch"):
+            job = _Job(req=st, docs=d, speculative=not stage.is_final,
+                       enqueued=self.now)
+            st.jobs.append(job)
+            cached, compute = self._job_lens(job)
+            self.sched.submit(job, cached, compute)
+            if not stage.is_final:
+                self.metrics.spec_prefills += 1
+        if stage.is_final:
+            if st.tl.queue_enter < 0:
+                st.tl.queue_enter = self.now
+            self._maybe_finalize(st)
+        self._engine_kick()
+
+    def _maybe_finalize(self, st: _ReqRun) -> None:
+        """Search done: if a prefill for the final docs already completed,
+        the speculation paid off — emit the first token now."""
+        if st.tl.first_token >= 0 or st.state != WAITING:
+            return
+        res = st.results.get(st.final_docs)
+        if res is not None:
+            self._first_token(st, res, max(self.now, st.tl.search_end))
+
+    # ------------------------------------------------------------------
+    # engine loop
+    # ------------------------------------------------------------------
+
+    def _engine_kick(self) -> None:
+        while not self.engine_busy:
+            self.admission.invalidate()   # fresh resource snapshot per kick
+            if self._force_decode and self.running:
+                # a pagination just failed on shared-block pressure: run one
+                # decode iteration first so running requests make progress
+                # toward releasing their tables (livelock guard)
+                self._force_decode = False
+                self._start_decode()
+                return
+            self._force_decode = False
+            act = self.sched.next_action(len(self.running),
+                                         refresh=self._job_lens)
+            if act.kind == PREFILL:
+                self._start_prefill(act.item)
+                return
+            if act.kind == DECODE:
+                self._start_decode()
+                return
+            if act.kind == PREEMPT:
+                self._preempt_one()
+                continue               # resources freed; re-evaluate
+            return                     # IDLE
+
+    def _preempt_one(self) -> None:
+        """Free the youngest running request and send it back to prefill
+        (vLLM-style recompute preemption)."""
+        victim = max(self.running, key=lambda s: s.tl.first_token)
+        self.running.remove(victim)
+        self._release_table(victim)
+        victim.state = WAITING
+        victim.tokens = []
+        victim.remaining = self.max_new_tokens
+        victim.results.pop(victim.final_docs, None)
+        victim.tl.first_token = -1.0    # recompute re-emits the first token
+        victim.tl.token_times = []
+        victim.tl.preemptions += 1
+        self.metrics.preemptions += 1
+        job = _Job(req=victim, docs=victim.final_docs, speculative=False,
+                   enqueued=self.now)
+        victim.jobs.append(job)
+        cached, compute = self._job_lens(job)
+        self.sched.submit(job, cached, compute)
+
+    # ---- prefill ------------------------------------------------------
+
+    def _start_prefill(self, job: _Job) -> None:
+        st = job.req
+        job.started = self.now
+        st.start_by_docs.setdefault(job.docs, self.now)
+        self.engine_busy = True
+        self.sched.note_prefill_start()
+        self.metrics.record_iteration("prefill", 1)
+        t0 = time.perf_counter()
+        doc_tokens = [int(self.corpus.doc_lengths[d]) for d in job.docs]
+        plan = self.controller.plan(job.docs, doc_tokens,
+                                    len(st.r.question_tokens))
+        self.controller.promote(plan)   # host->device pull, measured below
+        # segment-chained prefill: cached prefix -> each uncached doc ->
+        # question (identical math to the sequential engine)
+        prefix, plen = self._assemble_prefix(plan.hit_nodes)
+        payloads = []
+        for i in range(len(plan.hit_nodes), len(job.docs)):
+            toks = jnp.asarray(self.corpus.doc_tokens[job.docs[i]])[None]
+            _, cache = self._prefill_fn(self.params, toks, prefix, plen)
+            payloads.append((plen, int(toks.shape[1]), cache))
+            prefix, plen = cache, plen + int(toks.shape[1])
+        qtoks = jnp.asarray(st.r.question_tokens)[None]
+        logits, cache = self._prefill_fn(self.params, qtoks, prefix, plen)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        res = _PrefillResult(
+            docs=job.docs, cache=cache,
+            first_token=int(jnp.argmax(logits[0, -1])),
+            total_len=plen + int(qtoks.shape[1]),
+            alpha=plan.alpha, beta=plan.beta, hit_docs=plan.hit_docs,
+            speculative=job.speculative, started=job.started)
+        self._push(self.now + dt, "prefill_done", (job, plan, payloads, res))
+
+    def _on_prefill_done(self, payload) -> None:
+        job, plan, payloads, res = payload
+        st = job.req
+        self.engine_busy = False
+        self.sched.note_prefill_end()
+        if job.cancelled or st.state != WAITING:
+            for n in plan.hit_nodes:      # unpin without committing
+                n.pinned = False
+            self.metrics.wasted_prefills += 1
+        else:
+            self._commit_payloads(plan, payloads)
+            st.results[job.docs] = res
+            if st.final_docs is not None and job.docs == st.final_docs:
+                self._first_token(st, res, max(self.now, st.tl.search_end))
+        self._engine_kick()
+
+    def _commit_payloads(self, plan, payloads) -> None:
+        """Page the new per-doc KV segments into the store and insert them
+        into the knowledge tree; stop caching at the first doc the pool
+        cannot hold (graceful §8-style truncation)."""
+        segs = []
+        for (start, length, cache) in payloads:
+            k = cache["k"][:, :, start:start + length]
+            v = cache["v"][:, :, start:start + length]
+            if not self._reclaim_blocks(self.store.pool.blocks_for_tokens(length)):
+                break
+            try:
+                segs.append(self.store.put(k, v))
+            except OutOfBlocks:
+                break
+        inserted = self.controller.commit(
+            plan, segs, max_docs=len(plan.hit_nodes) + len(segs))
+        for seg in segs[len(inserted):]:   # insert stopped early: free tail
+            self.store.free(seg)
+
+    def _reclaim_blocks(self, needed: int) -> bool:
+        """Evict unpinned tree leaves (PGDSF order, shared Alg. 1 loop)
+        until the pool has ``needed`` free blocks."""
+        try:
+            self.tree.evict_gpu_until(
+                lambda: self.store.pool.free_blocks >= needed)
+            return True
+        except EvictionError:
+            return False
+
+    def _assemble_prefix(self, nodes) -> Tuple[Optional[dict], int]:
+        if not nodes:
+            return None, 0
+        ks, vs = [], []
+        for n in nodes:
+            k, v = self.store.gather(n.payload_gpu)
+            ks.append(k)
+            vs.append(v)
+        k = jnp.concatenate(ks, axis=2)
+        return {"k": k, "v": jnp.concatenate(vs, axis=2)}, int(k.shape[2])
+
+    # ---- first token & decode admission --------------------------------
+
+    def _first_token(self, st: _ReqRun, res: _PrefillResult, t: float) -> None:
+        tl = st.tl
+        tl.first_token = t
+        tl.prefill_end = t
+        tl.alpha, tl.beta = res.alpha, res.beta
+        tl.hit_docs = res.hit_docs
+        tl.n_docs = len(res.docs)
+        tl.docs = res.docs
+        tl.speculative_hit = res.speculative or res.started < tl.search_end
+        start = st.start_by_docs.get(res.docs)
+        if start is not None:
+            tl.final_prefill_start = start
+        st.tokens = [res.first_token]
+        st.remaining = self.max_new_tokens - 1
+        for job in st.jobs:            # any other pending work is now moot
+            if not job.cancelled and job.docs != res.docs:
+                job.cancelled = True
+        if st.remaining <= 0:
+            self._finish(st, t)
+            return
+        if not self._paginate(st, res):
+            # pool pressure raced us between admission and join: retry later
+            self._requeue_after_pagination_failure(st)
+            return
+        st.state = RUNNING
+        st.last_tok = res.first_token
+        self.running.append(st)
+
+    def _requeue_after_pagination_failure(self, st: _ReqRun) -> None:
+        st.results.pop(st.final_docs, None)
+        st.tokens = []
+        st.tl.first_token = -1.0       # not actually servable yet
+        self._force_decode = True      # guarantee decode progress before
+                                       # this job can be re-popped
+        job = _Job(req=st, docs=st.final_docs, speculative=False,
+                   enqueued=self.now)
+        st.jobs.append(job)
+        cached, compute = self._job_lens(job)
+        self.sched.submit(job, cached, compute)
+
+    def _paginate(self, st: _ReqRun, res: _PrefillResult) -> bool:
+        """Build the request's decode block table: refcount-share the
+        block-aligned knowledge-tree prefix, copy the rest (unaligned doc
+        tail + question) into private blocks with decode reserve."""
+        bs = self.store.block_size
+        table: List[int] = []
+        shared: List[int] = []
+        offset = 0
+        for node in self.tree.match_prefix(res.docs):
+            seg = node.payload_gpu
+            if (seg is None or not node.in_gpu
+                    or seg.n_tokens != node.n_tokens
+                    or seg.n_tokens % bs != 0):
+                break
+            self.store.share(seg)
+            table.extend(seg.blocks)
+            shared.extend(seg.blocks)
+            offset += seg.n_tokens
+        rest = res.total_len - offset
+        k = res.cache["k"][:, :, offset:res.total_len]
+        v = res.cache["v"][:, :, offset:res.total_len]
+        need = self.store.pool.blocks_for_tokens(rest + st.remaining)
+        if not self._reclaim_blocks(need):
+            self.store.release(shared)
+            return False
+        try:
+            priv = self.store.put(k, v, reserve_tokens=st.remaining)
+        except OutOfBlocks:
+            self.store.release(shared)
+            return False
+        table.extend(priv.blocks)
+        st.table = table
+        st.owned_blocks = shared + priv.blocks
+        st.length = res.total_len
+        self.metrics.blocks_shared += len(shared)
+        self.metrics.blocks_copied += len(priv.blocks)
+        return True
+
+    def _release_table(self, st: _ReqRun) -> None:
+        if st.owned_blocks:
+            self.store.release(st.owned_blocks)
+        st.table, st.owned_blocks = [], []
+        st.length = 0
+
+    # ---- batched decode ------------------------------------------------
+
+    def _build_decode_fn(self) -> None:
+        cfg = self.cfg
+        B = self.sched.config.max_batch
+        ns = self._n_slots
+        bs = self.store.block_size
+
+        def step(params, toks, tables, lengths, k_pages, v_pages):
+            k, v = k_pages[:, tables], v_pages[:, tables]
+            L = k.shape[0]
+            k = k.reshape(L, B, ns * bs, *k.shape[4:])
+            v = v.reshape(L, B, ns * bs, *v.shape[4:])
+            logits, new = M.decode_step(cfg, params, toks,
+                                        {"k": k, "v": v}, lengths + 1)
+            bidx = jnp.arange(B)
+            newk = new["k"][:, bidx, lengths]          # (L, B, KV, hd)
+            newv = new["v"][:, bidx, lengths]
+            blk = tables[bidx, lengths // bs]
+            slot = lengths % bs
+            k_pages = k_pages.at[:, blk, slot].set(newk.astype(k_pages.dtype))
+            v_pages = v_pages.at[:, blk, slot].set(newv.astype(v_pages.dtype))
+            return jnp.argmax(logits[:, -1], axis=-1), k_pages, v_pages
+
+        self._decode_fn = jax.jit(step, donate_argnums=(4, 5))
+        # warm up the single decode shape so its compile never lands on the
+        # serving clock (all dummy rows write into the scratch block)
+        toks = jnp.zeros((B, 1), jnp.int32)
+        tables = jnp.full((B, ns), self._scratch_block, jnp.int32)
+        lengths = jnp.zeros((B,), jnp.int32)
+        _, self.store.k, self.store.v = self._decode_fn(
+            self.params, toks, tables, lengths, self.store.k, self.store.v)
+        jax.block_until_ready(self.store.k)
+
+    def _start_decode(self) -> None:
+        batch = self.running[:self.sched.config.max_batch]
+        B = self.sched.config.max_batch
+        ns = self._n_slots
+        toks = np.zeros((B, 1), np.int32)
+        tables = np.full((B, ns), self._scratch_block, np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for i, st in enumerate(batch):
+            toks[i, 0] = st.last_tok
+            tables[i, :len(st.table)] = st.table
+            lengths[i] = st.length
+        self.engine_busy = True
+        self.metrics.record_iteration("decode", len(batch))
+        t0 = time.perf_counter()
+        next_toks, self.store.k, self.store.v = self._decode_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(tables),
+            jnp.asarray(lengths), self.store.k, self.store.v)
+        next_toks = np.asarray(jax.block_until_ready(next_toks))
+        dt = time.perf_counter() - t0
+        self._push(self.now + dt, "decode_done",
+                   (batch, [int(t) for t in next_toks[:len(batch)]]))
+
+    def _on_decode_done(self, payload) -> None:
+        batch, toks = payload
+        self.engine_busy = False
+        for st, tok in zip(batch, toks):
+            if st.state != RUNNING:     # preempted meanwhile
+                continue
+            st.tokens.append(tok)
+            st.last_tok = tok
+            st.length += 1
+            st.remaining -= 1
+            st.tl.token_times.append(self.now)
+            if st.remaining <= 0:
+                self.running.remove(st)
+                self._release_table(st)
+                self._finish(st, self.now)
+        self._engine_kick()
+
+    def _finish(self, st: _ReqRun, t: float) -> None:
+        st.state = FINISHED
+        st.tl.finish = t
+        st.tl.tokens = list(st.tokens)
+        for job in st.jobs:
+            job.cancelled = True
+        # drop the dense prefill caches (incl. wasted speculations) — the
+        # paged store/tree is the only KV owner after a request completes
+        st.results = {}
+        st.jobs = []

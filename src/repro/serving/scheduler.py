@@ -1,0 +1,202 @@
+"""Iteration-level continuous-batching scheduler (vLLM/Orca-style).
+
+One decision per engine iteration: start ONE prefill (possibly speculative,
+picked from the cache-aware ``ReorderQueue``) or run ONE batched decode step
+for every running request.  Prefill is preferred while the decode batch has
+room — it adds a request to the batch, which is what keeps the GPU busy
+under load — and decode drains the batch otherwise.
+
+The scheduler is engine-agnostic: queue items are opaque; the engine supplies
+``viable`` (not cancelled / request not finished) and ``admit`` (resource
+admission) callbacks.  Both the real JAX runtime (``serving.runtime``) and
+the discrete-event simulator (``serving.simulator``) drive THIS code, so the
+simulated policy and the executed policy cannot drift.
+
+Admission control is by paged-KV-block budget and knowledge-tree pin budget
+(``PagedAdmission``): a request is admitted only if the block pool can hold
+its full context plus decode reservation and the tree's GPU tier can take its
+to-be-computed document states on top of currently pinned bytes.  When an
+admissible-resource-starved request has been skipped ``preempt_after_skips``
+times, the scheduler asks the engine to preempt (engine picks the victim —
+youngest running request — frees its blocks, and requeues it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Generic, Optional, TypeVar
+
+from repro.core.reorder import ReorderQueue
+
+T = TypeVar("T")
+
+PREFILL = "prefill"
+DECODE = "decode"
+PREEMPT = "preempt"
+IDLE = "idle"
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 4             # decode batch slots (paper testbed: 4)
+    max_prefill_bs: int = 4        # DSP speculative-prefill pool bound
+    reorder: bool = True           # cache-aware reordering (§5.2)
+    reorder_window: int = 32       # starvation window
+    preempt_after_skips: int = 8   # admission-starved skips before preemption
+
+
+@dataclasses.dataclass
+class Action(Generic[T]):
+    kind: str                      # PREFILL | DECODE | PREEMPT | IDLE
+    item: Optional[T] = None       # the prefill job for PREFILL
+
+
+class ContinuousBatchScheduler(Generic[T]):
+    def __init__(
+        self,
+        config: SchedulerConfig,
+        *,
+        viable: Callable[[T], bool],
+        admit: Optional[Callable[[T], bool]] = None,
+    ):
+        self.config = config
+        self.viable = viable
+        self.admit = admit
+        self.queue: ReorderQueue[T] = ReorderQueue(
+            config.reorder_window, enabled=config.reorder)
+        self.prefills_running = 0
+
+    # ---- queue interface ---------------------------------------------------
+
+    def submit(self, item: T, cached_len: int, compute_len: int) -> None:
+        self.queue.push(item, cached_len, max(compute_len, 1))
+
+    def pool_size(self) -> int:
+        """Pending-prefill pool size for Algorithm 2's admission bound."""
+        return len(self.queue) + self.prefills_running
+
+    def note_prefill_start(self) -> None:
+        self.prefills_running += 1
+
+    def note_prefill_end(self) -> None:
+        self.prefills_running -= 1
+
+    # ---- the per-iteration decision ---------------------------------------
+
+    def next_action(
+        self,
+        n_running: int,
+        refresh: Optional[Callable[[T], tuple]] = None,
+    ) -> Action[T]:
+        """Decide what the engine should launch this iteration.
+
+        n_running: current decode-batch size.
+        refresh: recompute (cached_len, compute_len) per item — hit lengths
+        move as the knowledge tree evolves between submit and schedule.
+        """
+        self.queue.prune(lambda it: not self.viable(it))
+        if n_running < self.config.max_batch:
+            if refresh is not None:
+                self.queue.refresh(refresh)
+            if self.admit is None:
+                job = self.queue.pop(self.viable)
+                return Action(PREFILL, job) if job is not None \
+                    else (Action(DECODE) if n_running else Action(IDLE))
+            # admission verdicts are O(resource-state) to compute; evaluate
+            # once per entry per round and reuse between the starvation
+            # bump and the pop filter
+            verdicts = {}
+
+            def adm(it):
+                key = id(it)
+                if key not in verdicts:
+                    verdicts[key] = self.admit(it)
+                return verdicts[key]
+
+            blocked = lambda it: self.viable(it) and not adm(it)
+            # the preemption check runs EVERY round (a stream of small
+            # admissible jobs must not starve a large request forever), but
+            # only while >1 request runs: evicting the sole running request
+            # gains no concurrency, only recompute waste — and because the
+            # engine preempts youngest-first, the oldest running request
+            # always advances, which is what guarantees global progress
+            # (no preemption ping-pong when the pool only fits one request)
+            if (n_running > 1
+                    and self.queue.max_skipped(blocked)
+                    >= self.config.preempt_after_skips):
+                # a request is starving on resources only: make room
+                return Action(PREEMPT)
+            job = self.queue.pop(lambda it: self.viable(it) and adm(it))
+            if job is not None:
+                # pop aged every remaining entry (incl. blocked ones)
+                return Action(PREFILL, job)
+            # nothing popped, so nothing aged: bump blocked entries here —
+            # exactly one increment per round either way
+            self.queue.bump_skipped(blocked)
+        if n_running > 0:
+            return Action(DECODE)
+        return Action(IDLE)
+
+
+# --------------------------------------------------------------------------
+# admission control: paged-block + tree-pin budgets
+# --------------------------------------------------------------------------
+
+def tree_pinned_gpu_bytes(tree) -> int:
+    """Bytes of GPU-tier nodes pinned by in-flight requests."""
+    return sum(n.bytes_ for n in tree.nodes() if n.pinned and n.in_gpu)
+
+
+@dataclasses.dataclass
+class PagedAdmission:
+    """Budget check for one prefill job against shared serving resources.
+
+    pool:   the device BlockPool backing both tree payloads and request
+            block tables.
+    tree:   the KnowledgeTree (GPU tier doubles as the doc-state budget).
+    decode_reserve: tokens of decode headroom to reserve at admission
+            (max_new_tokens) so a running request can never stall mid-decode.
+    """
+    pool: object                    # BlockPool
+    tree: object                    # KnowledgeTree
+    decode_reserve: int
+    # cached (available_blocks, pin_headroom_bytes): the two tree walks are
+    # identical for every job in a scheduling round, so the engine
+    # invalidates once per kick and all queued jobs share one snapshot
+    _snap: object = dataclasses.field(default=None, init=False, repr=False)
+
+    def invalidate(self) -> None:
+        self._snap = None
+
+    def _snapshot(self):
+        if self._snap is None:
+            self._snap = (
+                self.pool.free_blocks + self.evictable_blocks(),
+                self.tree.gpu_capacity - tree_pinned_gpu_bytes(self.tree),
+            )
+        return self._snap
+
+    def blocks_needed(self, context_tokens: int) -> int:
+        return self.pool.blocks_for_tokens(context_tokens + self.decode_reserve)
+
+    def evictable_blocks(self) -> int:
+        """Blocks actually recoverable by evicting unpinned GPU-tier tree
+        nodes. Blocks refcount-shared into a running request's block table
+        do NOT count — they stay allocated after eviction, and counting
+        them livelocks the engine (admission keeps green-lighting a job
+        whose pagination can never succeed until a running request ends)."""
+        total = 0
+        for n in self.tree.nodes():
+            seg = n.payload_gpu
+            if n.in_gpu and not n.pinned and seg is not None \
+                    and hasattr(seg, "blocks"):
+                total += self.pool.exclusive(seg.blocks)
+        return total
+
+    def admissible(self, context_tokens: int, beta_tokens: int) -> bool:
+        """context_tokens: full sequence (docs + question) the request will
+        hold in its block table; beta_tokens: to-be-computed tokens whose
+        document states the prefill will pin into the tree's GPU tier."""
+        avail, headroom = self._snapshot()
+        if self.blocks_needed(context_tokens) > avail:
+            return False
+        return beta_tokens * self.tree.bytes_per_token <= headroom

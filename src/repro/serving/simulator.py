@@ -14,6 +14,11 @@ Engine model (matches the paper's testbed semantics):
   * a speculative prefill whose documents go stale is cancelled if still
     queued; if running it completes (the paper cancels "after the current
     iteration" — one prefill == one iteration here).
+
+The per-iteration decision (prefill vs decode, cache-aware job pick) is NOT
+local code: it is the shared ``serving.scheduler.ContinuousBatchScheduler``,
+the same policy object the real JAX runtime (``serving.runtime``) executes,
+so simulated and real scheduling cannot drift.
 """
 from __future__ import annotations
 
@@ -27,9 +32,11 @@ import numpy as np
 from repro.core.controller import RAGController, RequestPlan
 from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler, HardwareProfile
-from repro.core.reorder import ReorderQueue
 from repro.core.speculative import SpecState, SpeculativeController
 from repro.retrieval.corpus import Corpus, Request
+from repro.serving.scheduler import (DECODE, PREFILL,
+                                     ContinuousBatchScheduler,
+                                     SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -137,14 +144,20 @@ class RAGSimulator:
         self.controller = RAGController(self.tree)
         self.spec_ctl = SpeculativeController(cfg.max_prefill_bs,
                                               enabled=cfg.speculative)
-        self.queue: ReorderQueue[_Job] = ReorderQueue(
-            cfg.reorder_window, enabled=cfg.reorder)
+        # shared iteration-level policy (same object type the real runtime
+        # drives); simulation has no block pool, so admission is unbounded
+        self.sched: ContinuousBatchScheduler[_Job] = ContinuousBatchScheduler(
+            SchedulerConfig(max_batch=cfg.max_batch,
+                            max_prefill_bs=cfg.max_prefill_bs,
+                            reorder=cfg.reorder,
+                            reorder_window=cfg.reorder_window),
+            viable=lambda job: not job.cancelled and not job.req.done)
+        self.queue = self.sched.queue
         self.decode_running: List[_ReqState] = []
         self.engine_busy = False
         self.now = 0.0
         self._events: List = []
         self._seq = itertools.count()
-        self._prefills_running = 0
         self.sched_times: List[float] = []
         self._all_states: List[_ReqState] = []
 
@@ -177,7 +190,7 @@ class RAGSimulator:
             self._push(t, "stage", (st, stage))
 
     def _pool_size(self) -> int:
-        return len(self.queue) + self._prefills_running
+        return self.sched.pool_size()
 
     def _on_stage(self, payload) -> None:
         st, stage = payload
@@ -201,7 +214,7 @@ class RAGSimulator:
             hit = self.tree.match_prefix(d)
             cached = sum(n.n_tokens for n in hit)
             compute = sum(plan_docs) + len(st.r.question_tokens) - cached
-            self.queue.push(job, cached, max(compute, 1))
+            self.sched.submit(job, cached, compute)
         self.sched_times.append(_t.perf_counter() - t0)
         if stage.is_final:
             self._maybe_finalize(st)
@@ -222,24 +235,13 @@ class RAGSimulator:
             return
         import time as _t
         t0 = _t.perf_counter()
-        job = self._next_prefill()
+        act = self.sched.next_action(len(self.decode_running),
+                                     refresh=self._job_lens)
         self.sched_times.append(_t.perf_counter() - t0)
-        if job is not None:
-            self._start_prefill(job)
-        elif self.decode_running:
+        if act.kind == PREFILL:
+            self._start_prefill(act.item)
+        elif act.kind == DECODE:
             self._start_decode()
-
-    def _next_prefill(self) -> Optional[_Job]:
-        if len(self.decode_running) >= self.cfg.max_batch:
-            return None
-        self.queue.refresh(self._job_lens)
-        while True:
-            job = self.queue.pop()
-            if job is None:
-                return None
-            if job.cancelled or job.req.done:
-                continue
-            return job
 
     def _job_lens(self, job: _Job) -> Tuple[int, int]:
         hit = self.tree.match_prefix(job.docs)
@@ -266,7 +268,7 @@ class RAGSimulator:
             job.start_candidate = self.now
             st.spec_start_by_docs.setdefault(job.docs, self.now)
         self.engine_busy = True
-        self._prefills_running += 1
+        self.sched.note_prefill_start()
         # chunked prefill: n iterations, cancellable between them (Alg. 2
         # "terminate after the current iteration")
         n_iters = max(1, -(-plan.beta // self.cfg.prefill_chunk))
@@ -283,7 +285,7 @@ class RAGSimulator:
             return
         # finished (or cancelled after the current iteration)
         self.engine_busy = False
-        self._prefills_running -= 1
+        self.sched.note_prefill_end()
         if done_iters >= n_iters and not job.cancelled:
             # completed prefills populate the tree even if speculative;
             # §8 "Large top-k": optionally cache only the leading docs

@@ -1,6 +1,9 @@
 """Knowledge tree + PGDSF unit & property tests (paper §5.1, Alg. 1)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.knowledge_tree import (EvictionError, KnowledgeTree, Node,

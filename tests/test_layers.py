@@ -1,10 +1,13 @@
 """Layer-level numerics: flash attention fwd/bwd vs naive, chunkwise mLSTM
 vs recurrent oracle, chunked_scan equivalence, MoE paths."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.models import layers as L

@@ -1,7 +1,10 @@
 """Paged KV block pool: unit + hypothesis property tests."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kvcache.paged import BlockPool, OutOfBlocks, PagedKVStore

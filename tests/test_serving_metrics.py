@@ -1,0 +1,76 @@
+"""Serving metrics: timeline arithmetic, percentile aggregation, overlap
+accounting."""
+import pytest
+
+from repro.serving.metrics import (RequestTimeline, ServingMetrics,
+                                   percentiles)
+
+
+def test_percentiles_known_values():
+    p = percentiles([float(i) for i in range(1, 101)])
+    assert p["mean"] == pytest.approx(50.5)
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p90"] == pytest.approx(90.1)
+    assert p["p99"] == pytest.approx(99.01)
+    assert p["max"] == 100.0
+
+
+def test_percentiles_empty():
+    p = percentiles([])
+    assert p == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "max": 0.0}
+
+
+def _timeline(**kw):
+    tl = RequestTimeline(req_id=0, arrival=10.0)
+    for k, v in kw.items():
+        setattr(tl, k, v)
+    return tl
+
+
+def test_ttft_tpot_queueing():
+    tl = _timeline(search_start=10.0, search_end=10.5, queue_enter=10.5,
+                   final_prefill_start=10.6, first_token=11.0,
+                   token_times=[11.2, 11.4, 11.6])
+    assert tl.ttft == pytest.approx(1.0)
+    assert tl.tpot == pytest.approx(0.2)
+    assert tl.queueing == pytest.approx(0.1)
+
+
+def test_overlap_accounting():
+    # speculative prefill started mid-search: only the pre-launch part of
+    # the search is on the critical path
+    tl = _timeline(search_start=0.0, search_end=1.0, final_prefill_start=0.3,
+                   first_token=1.5)
+    assert tl.search_time == pytest.approx(1.0)
+    assert tl.non_overlapped_search == pytest.approx(0.3)
+    # no prefill overlap (sequential behaviour): full search is serial
+    tl2 = _timeline(search_start=0.0, search_end=1.0, first_token=2.0)
+    assert tl2.non_overlapped_search == pytest.approx(1.0)
+    # prefill started after search finished: zero overlap
+    tl3 = _timeline(search_start=0.0, search_end=1.0,
+                    final_prefill_start=2.0, first_token=3.0)
+    assert tl3.non_overlapped_search == pytest.approx(1.0)
+
+
+def test_summary_aggregates():
+    m = ServingMetrics()
+    for i, (ft, spec) in enumerate([(1.0, True), (2.0, False)]):
+        tl = m.timeline(i, 0.0)
+        tl.first_token = ft
+        tl.speculative_hit = spec
+        tl.hit_docs, tl.n_docs = 1, 2
+        tl.token_times = [ft + 0.1]
+    unserved = m.timeline(99, 0.0)        # never completed: excluded
+    assert unserved.first_token < 0
+    m.record_iteration("prefill", 1)
+    m.record_iteration("decode", 2)
+    m.record_iteration("decode", 4)
+    s = m.summary()
+    assert s["completed"] == 2
+    assert s["ttft"]["mean"] == pytest.approx(1.5)
+    assert s["mean_decode_batch"] == pytest.approx(3.0)
+    assert s["max_decode_batch"] == 4
+    assert s["prefill_iterations"] == 1
+    assert s["speculative_hits"] == 1
+    assert s["doc_hit_rate"] == pytest.approx(0.5)
+    assert "TTFT" in m.format_report()

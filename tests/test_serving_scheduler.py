@@ -1,0 +1,170 @@
+"""Continuous-batching scheduler: admission control, preemption trigger,
+prefill/decode interleaving (shared policy for runtime + simulator)."""
+import dataclasses
+
+import pytest
+
+from repro.core.knowledge_tree import KnowledgeTree
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+from repro.kvcache.paged import BlockPool, PagedKVStore
+from repro.serving.scheduler import (DECODE, IDLE, PREEMPT, PREFILL,
+                                     Action, ContinuousBatchScheduler,
+                                     PagedAdmission, SchedulerConfig,
+                                     tree_pinned_gpu_bytes)
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    cancelled: bool = False
+    done: bool = False
+    admissible: bool = True
+
+
+def make_sched(max_batch=4, admit=True, **kw):
+    cfg = SchedulerConfig(max_batch=max_batch, **kw)
+    return ContinuousBatchScheduler(
+        cfg,
+        viable=lambda j: not j.cancelled and not j.done,
+        admit=(lambda j: j.admissible) if admit else None,
+    )
+
+
+def test_prefill_preferred_while_batch_has_room():
+    s = make_sched()
+    s.submit(Job("a"), cached_len=10, compute_len=10)
+    act = s.next_action(n_running=2)
+    assert act.kind == PREFILL and act.item.name == "a"
+
+
+def test_decode_when_batch_full_or_queue_empty():
+    s = make_sched(max_batch=2)
+    s.submit(Job("a"), 1, 1)
+    assert s.next_action(n_running=2).kind == DECODE   # batch full
+    assert s.next_action(n_running=1).kind == PREFILL
+    assert s.next_action(n_running=1).kind == DECODE   # queue drained
+
+
+def test_idle_when_nothing_to_do():
+    s = make_sched()
+    assert s.next_action(n_running=0).kind == IDLE
+
+
+def test_cancelled_jobs_are_pruned():
+    s = make_sched()
+    j = Job("stale")
+    s.submit(j, 5, 5)
+    j.cancelled = True
+    assert s.next_action(n_running=0).kind == IDLE
+    assert len(s.queue) == 0
+
+
+def test_admission_blocked_job_stays_queued():
+    s = make_sched()
+    j = Job("big", admissible=False)
+    s.submit(j, 0, 100)
+    assert s.next_action(n_running=0).kind == IDLE
+    assert len(s.queue) == 1          # not dropped, waiting for resources
+    j.admissible = True
+    assert s.next_action(n_running=0).kind == PREFILL
+
+
+def test_preemption_after_starvation_window():
+    s = make_sched(preempt_after_skips=3)
+    s.submit(Job("starved", admissible=False), 0, 100)
+    # admission-blocked rounds age the entry; decode keeps running meanwhile
+    kinds = [s.next_action(n_running=2).kind for _ in range(5)]
+    assert DECODE in kinds
+    assert PREEMPT in kinds
+    # preemption is never proposed with an empty batch (nothing to evict)
+    s2 = make_sched(preempt_after_skips=1)
+    s2.submit(Job("starved", admissible=False), 0, 100)
+    for _ in range(5):
+        assert s2.next_action(n_running=0).kind == IDLE
+
+
+def test_cache_aware_job_order():
+    s = make_sched()
+    s.submit(Job("cold"), cached_len=0, compute_len=100)
+    s.submit(Job("hot"), cached_len=90, compute_len=10)
+    assert s.next_action(0).item.name == "hot"
+    assert s.next_action(0).item.name == "cold"
+
+
+def test_pool_size_tracks_queue_and_running_prefills():
+    s = make_sched()
+    s.submit(Job("a"), 1, 1)
+    assert s.pool_size() == 1
+    s.note_prefill_start()
+    assert s.pool_size() == 2
+    s.note_prefill_end()
+    assert s.pool_size() == 1
+
+
+# ---- PagedAdmission ------------------------------------------------------
+
+def _tree(gpu=1 << 20, bpt=1):
+    return KnowledgeTree(gpu, 1 << 20,
+                         profiler=CostProfiler.from_profile(A10G_MISTRAL_7B),
+                         bytes_per_token=bpt)
+
+
+def test_admission_block_budget():
+    pool = BlockPool(n_blocks=10, block_size=16)
+    adm = PagedAdmission(pool, _tree(), decode_reserve=8)
+    # ctx 100 + reserve 8 -> 7 blocks <= 10 free
+    assert adm.admissible(context_tokens=100, beta_tokens=10)
+    # ctx 200 + 8 -> 13 blocks > 10
+    assert not adm.admissible(context_tokens=200, beta_tokens=10)
+    pool.alloc(6)
+    adm.invalidate()                   # resource state changed
+    assert not adm.admissible(context_tokens=100, beta_tokens=10)
+
+
+def test_admission_counts_evictable_tree_blocks():
+    store = PagedKVStore(n_layers=1, n_blocks=8, block_size=4, n_kv=1,
+                         head_dim=2)
+    import numpy as np
+    tree = _tree(bpt=store.bytes_per_token())
+    seg = store.put(np.zeros((1, 1, 16, 1, 2)), np.zeros((1, 1, 16, 1, 2)))
+    node, _ = tree.insert(tree.root, 0, 16, payload=seg)
+    assert store.pool.free_blocks == 4
+    adm = PagedAdmission(store.pool, tree, decode_reserve=0)
+    # 20 tokens -> 5 blocks: only 4 free, but 4 more evictable via the tree
+    assert adm.admissible(context_tokens=20, beta_tokens=0)
+    node.pinned = True                 # pinned nodes are not evictable
+    adm.invalidate()
+    assert not adm.admissible(context_tokens=20, beta_tokens=0)
+    # blocks refcount-shared into a running table are NOT evictable-counted
+    node.pinned = False
+    store.share(seg)
+    adm.invalidate()
+    assert not adm.admissible(context_tokens=20, beta_tokens=0)
+
+
+def test_admission_tree_pin_headroom():
+    tree = _tree(gpu=100, bpt=1)
+    node, _ = tree.insert(tree.root, 0, 60)
+    node.pinned = True
+    adm = PagedAdmission(BlockPool(100, 16), tree, decode_reserve=0)
+    assert tree_pinned_gpu_bytes(tree) == 60
+    assert adm.admissible(context_tokens=10, beta_tokens=40)
+    assert not adm.admissible(context_tokens=10, beta_tokens=41)
+
+
+def test_preemption_threshold_not_double_counted():
+    """Blocked entries age exactly once per scheduling round, whether the
+    round popped an admissible job or not."""
+    s = make_sched(max_batch=8, preempt_after_skips=4)
+    s.submit(Job("whale", admissible=False), 0, 100)
+    rounds = 0
+    # stream of small admissible jobs: every round pops one
+    while True:
+        s.submit(Job(f"small{rounds}"), 10, 1)
+        act = s.next_action(n_running=2)
+        rounds += 1
+        if act.kind == PREEMPT:
+            break
+        assert act.kind == PREFILL
+        assert rounds < 20
+    assert rounds == 5                 # 4 aging rounds + the firing round
