@@ -2,10 +2,7 @@
 from __future__ import annotations
 
 import functools
-import time
-from typing import Dict, List, Tuple
-
-import numpy as np
+from typing import Dict, Tuple
 
 from repro.core.profiler import (A10G_LLAMA2_7B, A10G_MISTRAL_7B,
                                  H800_LLAMA2_70B, H800_MIXTRAL)
@@ -14,6 +11,17 @@ from repro.retrieval.vectordb import IVFIndex
 from repro.serving.simulator import RAGSimulator, SimConfig
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+# benchmarks.run --smoke sets this: clamp every corpus/workload to minimum
+# size so the whole benchmark suite runs in CI as a bitrot check (numbers
+# are meaningless in smoke mode — only "completes without exceptions" is
+# asserted).
+SMOKE = False
+
+
+def smoke_clamp(n: int, cap: int) -> int:
+    return min(n, cap) if SMOKE else n
+
 
 PROFILES = {
     "mistral-7b": A10G_MISTRAL_7B,
@@ -25,14 +33,19 @@ PROFILES = {
 
 @functools.lru_cache(maxsize=4)
 def corpus_and_index(n_docs: int = 2000, mean_doc: int = 1000, seed: int = 0):
+    n_docs = smoke_clamp(n_docs, 150)
+    mean_doc = smoke_clamp(mean_doc, 120)
     corpus = make_corpus(n_docs, mean_doc_tokens=mean_doc, seed=seed)
-    idx = IVFIndex(corpus.doc_vectors, n_clusters=64, nprobe=8, seed=seed)
+    idx = IVFIndex(corpus.doc_vectors,
+                   n_clusters=min(64, max(4, n_docs // 8)), nprobe=8,
+                   seed=seed)
     return corpus, idx
 
 
 def workload(corpus, n=300, rate=1.0, zipf=1.0, out_len=1, seed=1, **kw):
-    return make_workload(corpus, n_requests=n, rate=rate, zipf_s=zipf,
-                         output_len_mean=out_len, seed=seed, **kw)
+    return make_workload(corpus, n_requests=smoke_clamp(n, 25), rate=rate,
+                         zipf_s=zipf, output_len_mean=out_len, seed=seed,
+                         **kw)
 
 
 def simulate(corpus, idx, wl, **cfg_kw):

@@ -7,7 +7,6 @@ Paper claims: 1.2-4x lower TTFT vs vLLM, 1.1-3.5x vs SGLang;
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (BASELINES, PROFILES, corpus_and_index,
                                simulate, workload)

@@ -11,7 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import PROFILES, Row
+from benchmarks.common import PROFILES
 from repro.configs import get_reduced
 from repro.models import model as M
 

@@ -6,7 +6,7 @@ PCIe transfer.
 """
 from __future__ import annotations
 
-from benchmarks.common import PROFILES, Row
+from benchmarks.common import PROFILES
 
 
 def run() -> list:

@@ -2,7 +2,6 @@
 robust across ANN indexes (FlatL2 vs IVF)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import corpus_and_index, workload
 from repro.retrieval.corpus import access_cdf

@@ -1,7 +1,11 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Usage:
-    PYTHONPATH=src python -m benchmarks.run [module ...]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [module ...]
+
+``--smoke``: run every fig*/tab*/throughput_* benchmark at minimum size and
+exit non-zero if any raises — the CI slow lane runs this so benchmark
+scripts cannot bitrot silently.  Smoke numbers are meaningless.
 """
 from __future__ import annotations
 
@@ -27,13 +31,23 @@ MODULES = [
 
 def main() -> None:
     import importlib
-    wanted = sys.argv[1:] or MODULES
+    args = list(sys.argv[1:])
+    smoke = "--smoke" in args
+    if smoke:
+        args.remove("--smoke")
+        from benchmarks import common
+        common.SMOKE = True
+        default = [m for m in MODULES
+                   if m.startswith(("fig", "tab", "throughput_"))]
+    else:
+        default = MODULES
+    wanted = args or default
     print("name,us_per_call,derived")
     failures = 0
     for name in wanted:
-        mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             rows = mod.run()
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")

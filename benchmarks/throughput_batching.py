@@ -28,7 +28,8 @@ Row = tuple
 
 
 def run() -> List[Row]:
-    """Simulator sweep: requests/s x max_batch, continuous vs batch-1."""
+    """Simulator sweeps: requests/s x max_batch, then prefill-chunk size x
+    prefill-batch budget (the chunked/batched-prefill TTFT/TPOT knob)."""
     corpus, idx = corpus_and_index()
     rows: List[Row] = []
     for rate in (0.5, 1.5, 3.0):
@@ -48,6 +49,29 @@ def run() -> List[Row]:
             base[1] / max(best[1], 1e-9),
             "continuous batching vs one-at-a-time",
         ))
+    rows.extend(run_chunk_sweep(corpus, idx))
+    return rows
+
+
+def run_chunk_sweep(corpus, idx) -> List[Row]:
+    """Chunk-size x prefill-token-budget sweep at a fixed saturating rate:
+    small chunks shorten the cancellation window (more speculative tokens
+    saved) and let decode interleave (TPOT); a ragged prefill-token budget
+    packs short prefills together (TTFT under load)."""
+    rows: List[Row] = []
+    wl = workload(corpus, n=150, rate=2.0, zipf=1.0, out_len=6, seed=31)
+    for chunk in (128, 512, 2048, 0):
+        for budget in (0, 2048):
+            m, _ = simulate(corpus, idx, wl, max_batch=4,
+                            prefill_chunk=chunk, max_prefill_tokens=budget)
+            rows.append((
+                f"throughput/chunk{chunk or 'off'}/budget{budget or 'off'}",
+                m.avg_ttft * 1e6,
+                f"ttft={m.avg_ttft:.2f}s tpot={m.avg_tpot * 1e3:.0f}ms "
+                f"iters={m.prefill_iterations} "
+                f"packed={m.avg_prefill_batch:.2f} "
+                f"saved_tok={m.chunk_tokens_saved}",
+            ))
     return rows
 
 
@@ -79,14 +103,16 @@ def run_real(requests: int = 10, max_new: int = 4) -> None:
     print(f"{'sequential':>14} {wall:>7.1f} {len(seq) / wall:>6.2f} "
           f"{ttft * 1e3:>8.1f} {'1.00':>9}")
 
-    for max_batch in (2, 4):
+    for max_batch, chunk, budget in ((2, 0, 0), (4, 0, 0), (4, 16, 48)):
         rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                               max_batch=max_batch)
+                               max_batch=max_batch, prefill_chunk=chunk,
+                               max_prefill_tokens=budget)
         t0 = time.time()
         res = rt.serve(wl, max_new_tokens=max_new)
         wall = time.time() - t0
         s = rt.metrics.summary()
-        print(f"{f'cont(b={max_batch})':>14} {wall:>7.1f} "
+        tag = f"b={max_batch}" + (f",c={chunk}" if chunk else "")
+        print(f"{f'cont({tag})':>14} {wall:>7.1f} "
               f"{len(res) / wall:>6.2f} {s['ttft']['mean'] * 1e3:>8.1f} "
               f"{s['mean_decode_batch']:>9.2f}")
 

@@ -5,7 +5,6 @@ re-serves the same workload without the cache to show the TTFT gap.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
-import time
 
 import jax
 import numpy as np

@@ -2,17 +2,37 @@
 # Tier-1 CI: install dev deps (best effort — the image may be offline and
 # tests degrade gracefully without hypothesis) and run the test suite with
 # a hard timeout.
+#
+# Usage: scripts/ci.sh [--fast]
+#   --fast   skip slow-marked tests (the hosted-CI fast lane)
+#
+# Exit codes: pytest's own code on test failure; 124 on suite timeout
+# (reported distinctly on stderr).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
+# export PYTHONPATH ourselves instead of relying on pyproject discovery —
+# callers may invoke this script from any CWD or without pytest's rootdir
+# detection (e.g. a bare `bash scripts/ci.sh` in a hosted runner).
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
 TIMEOUT="${CI_TIMEOUT:-1800}"
+PYTEST_ARGS=(-q)
+for arg in "$@"; do
+    case "$arg" in
+        --fast) PYTEST_ARGS+=(-m "not slow") ;;
+        *) echo "ci: unknown argument '$arg'" >&2; exit 2 ;;
+    esac
+done
 
 pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "ci: dev-dep install skipped (offline?); continuing"
 
-timeout "$TIMEOUT" python -m pytest -q
+timeout "$TIMEOUT" python -m pytest "${PYTEST_ARGS[@]}"
 rc=$?
 if [ "$rc" -eq 124 ]; then
     echo "ci: test suite exceeded ${TIMEOUT}s timeout" >&2
+elif [ "$rc" -ne 0 ]; then
+    echo "ci: pytest failed (exit code $rc)" >&2
 fi
 exit "$rc"

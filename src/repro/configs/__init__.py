@@ -6,9 +6,8 @@
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import ModelConfig
 

@@ -8,7 +8,7 @@ computed document states into the knowledge tree and refreshes PGDSF stats.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.knowledge_tree import EvictionError, KnowledgeTree, Node
 

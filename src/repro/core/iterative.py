@@ -10,7 +10,7 @@ entire [docs_1 .. docs_i] path that hop i just inserted.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Sequence
 
 from repro.core.controller import RAGController, RequestPlan
 

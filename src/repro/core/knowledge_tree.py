@@ -311,7 +311,12 @@ class KnowledgeTree:
             node.in_gpu = True
             self.gpu_used += node.bytes_
         else:
-            node.payload_gpu = payload if payload is not None else node.payload_gpu
+            # already resident: keep the existing payload — with chunked /
+            # batched prefill, two in-flight requests can compute the same
+            # doc segment (plan→commit windows interleave); the caller frees
+            # any payload the tree did not take (it owns the storage)
+            if node.payload_gpu is None and payload is not None:
+                node.payload_gpu = payload
         return node, cost
 
     def ensure_in_gpu(self, nodes: Sequence[Node]) -> float:

@@ -47,29 +47,42 @@ class ReorderQueue(Generic[T]):
         for e in self._entries:
             e.cached_len, e.compute_len = fn(e.item)
 
-    def pop(self, viable: Optional[Callable[[T], bool]] = None) -> Optional[T]:
-        """Remove and return the best entry. ``viable`` restricts the
-        candidate set (e.g. admission control) without disturbing the
-        queue position of non-viable entries."""
+    def peek_entry(self, viable: Optional[Callable[[T], bool]] = None
+                   ) -> Optional["_Entry[T]"]:
+        """The entry ``pop`` would select, WITHOUT removing it — callers that
+        must check a resource fit (e.g. a prefill-token budget) peek first
+        and only ``remove`` when the entry actually fits, so a non-fitting
+        round does not disturb queue positions."""
         cands = (self._entries if viable is None
                  else [e for e in self._entries if viable(e.item)])
         if not cands:
             return None
         if not self.enabled:
-            best = min(cands, key=lambda e: e.seq)
-        else:
-            # starvation guard: anything skipped >= window times goes first
-            starved = [e for e in cands if e.skipped >= self.window]
-            if starved:
-                best = min(starved, key=lambda e: e.seq)
-            else:
-                best = max(
-                    cands,
-                    key=lambda e: (e.order_priority, -e.seq),
-                )
-        self._entries.remove(best)
-        for e in self._entries:
-            e.skipped += 1
+            return min(cands, key=lambda e: e.seq)
+        # starvation guard: anything skipped >= window times goes first
+        starved = [e for e in cands if e.skipped >= self.window]
+        if starved:
+            return min(starved, key=lambda e: e.seq)
+        return max(cands, key=lambda e: (e.order_priority, -e.seq))
+
+    def remove(self, entry: "_Entry[T]", age: bool = True) -> None:
+        """Remove a peeked entry; by default every remaining entry ages one
+        skip (the same bookkeeping ``pop`` performs).  Callers popping
+        several entries in ONE scheduling round pass ``age=False`` after the
+        first so entries age exactly once per round, not once per pop."""
+        self._entries.remove(entry)
+        if age:
+            for e in self._entries:
+                e.skipped += 1
+
+    def pop(self, viable: Optional[Callable[[T], bool]] = None) -> Optional[T]:
+        """Remove and return the best entry. ``viable`` restricts the
+        candidate set (e.g. admission control) without disturbing the
+        queue position of non-viable entries."""
+        best = self.peek_entry(viable)
+        if best is None:
+            return None
+        self.remove(best)
         return best.item
 
     def bump_skipped(self, pred: Optional[Callable[[T], bool]] = None) -> None:

@@ -13,7 +13,7 @@ discrete-event simulator both drive it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass

@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import prefix_attention as _pa
 from repro.kernels import paged_attention as _pg

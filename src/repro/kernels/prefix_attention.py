@@ -22,7 +22,6 @@ Validated against ``ref.reference_prefix_attention`` in interpret mode
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ contiguous (B, S, KV, hd) layout the model functions consume.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
@@ -125,6 +125,40 @@ class PagedKVStore:
                 self.k[:, b, : hi - lo] = k_seg[:, 0, lo:hi]
                 self.v[:, b, : hi - lo] = v_seg[:, 0, lo:hi]
         return PagedSegment(self, blocks, T)
+
+    def append(self, seg: "PagedSegment", k_new, v_new) -> "PagedSegment":
+        """Extend an existing segment with more tokens (chunked-prefill
+        continuation): fill the partially-used tail slots of the last block,
+        then allocate additional blocks for the remainder.
+
+        k_new/v_new: (L, 1, T, KV, hd) contiguous.  Mutates ``seg`` in place
+        (blocks list + n_tokens) and returns it.  Raises ``OutOfBlocks``
+        (leaving ``seg`` unchanged) if the pool cannot hold the extension.
+        """
+        T = int(k_new.shape[2])
+        if T == 0:
+            return seg
+        capacity = len(seg.blocks) * self.block_size
+        need = (seg.n_tokens + T) - capacity
+        if need > 0:
+            seg.blocks.extend(self.pool.alloc(self.pool.blocks_for_tokens(need)))
+        # slot coordinates for the appended token positions
+        pos = np.arange(seg.n_tokens, seg.n_tokens + T)
+        blk = np.asarray(seg.blocks, np.int64)[pos // self.block_size]
+        slot = pos % self.block_size
+        if self.device:
+            bi = jnp.asarray(blk)
+            si = jnp.asarray(slot)
+            self.k = self.k.at[:, bi, si].set(k_new[:, 0].astype(self.k.dtype))
+            self.v = self.v.at[:, bi, si].set(v_new[:, 0].astype(self.v.dtype))
+        else:
+            k_new = np.asarray(k_new)
+            v_new = np.asarray(v_new)
+            for t in range(T):
+                self.k[:, blk[t], slot[t]] = k_new[:, 0, t]
+                self.v[:, blk[t], slot[t]] = v_new[:, 0, t]
+        seg.n_tokens += T
+        return seg
 
     def gather(self, seg: "PagedSegment"):
         """Paged -> contiguous (L, 1, T, KV, hd)."""

@@ -47,6 +47,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-new-tokens", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="decode-batch slots (continuous mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="tokens per prefill chunk (0 = unchunked); applies "
+                         "to BOTH engines so --check-tokens compares "
+                         "identically chunked computations")
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="ragged prefill-batch token budget per engine "
+                         "iteration (0 = one request per iteration; "
+                         "continuous mode)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged-KV block size in tokens (continuous mode)")
     ap.add_argument("--rate", type=float, default=100.0,
@@ -78,7 +86,8 @@ def make_setup(args):
 def serve_sequential(cfg, params, corpus, idx, wl, args):
     srv = RAGServer(cfg, params, corpus, idx, top_k=args.top_k,
                     policy=args.policy, reorder=not args.no_reorder,
-                    speculative=not args.no_spec)
+                    speculative=not args.no_spec,
+                    prefill_chunk=args.prefill_chunk)
     t0 = time.time()
     results = srv.serve(wl, max_new_tokens=args.max_new_tokens)
     wall = time.time() - t0
@@ -103,6 +112,8 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
         cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
         reorder=not args.no_reorder, speculative=not args.no_spec,
         max_batch=args.max_batch, block_size=args.block_size,
+        prefill_chunk=args.prefill_chunk,
+        max_prefill_tokens=args.max_prefill_tokens,
         search_time_scale=args.search_scale)
     t0 = time.time()
     results = rt.serve(wl, max_new_tokens=args.max_new_tokens)

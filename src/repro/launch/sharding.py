@@ -14,10 +14,9 @@ counts (qwen2's 14 heads, hymba's 25).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -162,7 +161,6 @@ def batch_spec(cfg: ModelConfig, batch: int, mesh: Mesh) -> Tuple:
 
 def input_shardings(cfg: ModelConfig, inputs, mesh: Mesh):
     def spec(path, leaf):
-        name = str(getattr(path[-1], "key", path[-1]))
         if leaf.ndim == 0:
             return P()
         bax, _ = batch_spec(cfg, leaf.shape[0], mesh)

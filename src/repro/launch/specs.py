@@ -5,8 +5,7 @@ weak-type-correct, shardable, zero allocation.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +87,6 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh):
         batch_d["labels"] = jax.tree.map(
             lambda t: t, batch_d["tokens"])  # same shape/sharding as tokens
         if cfg.family == "vlm":
-            vt = cfg.vision_tokens
             batch_d["labels"] = _sds((batch, seq), jnp.int32, nsh(bax, None))
             batch_d["loss_mask"] = _sds((batch, seq), jnp.float32,
                                         nsh(bax, None))

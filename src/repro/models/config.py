@@ -7,7 +7,7 @@ zero/empty when unused.  Every config in ``repro.configs`` instantiates this.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -14,7 +14,7 @@ Memory discipline (these run at seq 4k-500k under 512-way SPMD):
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -17,8 +17,7 @@ heterogeneous block types need no dead parameters.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +103,6 @@ def _init_xlstm_blocks(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
     D = cfg.d_model
     Dp = int(cfg.proj_factor * D)
     H = cfg.n_heads
-    hd_m = Dp // H                     # mLSTM head dim (projected space)
     hd_s = D // H                      # sLSTM head dim (model space)
     F2 = max(128, (4 * D // 3) // 128 * 128)
     dt = cfg.jdtype
@@ -547,7 +545,6 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
     """
     inputs = {"tokens": tokens}
     x = embed_inputs(cfg, params, inputs)
-    B = x.shape[0]
 
     if cfg.family == "ssm":
         x, new_state = _run_xlstm(cfg, params, x, cache)

@@ -8,7 +8,7 @@ retrieval reproduces the skew end-to-end rather than by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 

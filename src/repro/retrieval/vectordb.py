@@ -15,7 +15,7 @@ by the simulator; real wall-clock is also measured for the on-CPU benches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +28,10 @@ from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler
 from repro.core.reorder import ReorderQueue
 from repro.core.speculative import SpecState, SpeculativeController
-from repro.kvcache.paged import PagedKVStore
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
+from repro.serving.scheduler import prefill_piece_sizes
 
 
 class _JaxBackend(CacheBackend):
@@ -79,6 +79,7 @@ class RAGServer:
         reorder_window: int = 32,
         speculative: bool = True,
         max_prefill_bs: int = 4,
+        prefill_chunk: int = 0,
         profiler: Optional[CostProfiler] = None,
     ):
         self.cfg = cfg
@@ -86,6 +87,11 @@ class RAGServer:
         self.corpus = corpus
         self.index = index
         self.top_k = top_k
+        # tokens per prefill call (0 = one call per segment).  Chunks are
+        # split per segment by the shared ``prefill_piece_sizes`` helper, so
+        # the chunked sequential engine issues the exact same attention
+        # calls as the chunked continuous runtime (bit-identical tokens).
+        self.prefill_chunk = prefill_chunk
         kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
                     * jnp.dtype(cfg.jdtype).itemsize)
         if cfg.family == "ssm":
@@ -174,12 +180,12 @@ class RAGServer:
         prefix, plen = self._assemble_prefix(plan.hit_nodes)
         payloads = []
         for i in range(len(plan.hit_nodes), len(docs)):
-            toks = jnp.asarray(self.corpus.doc_tokens[docs[i]])[None]
-            _, cache = self._prefill_fn(self.params, toks, prefix, plen)
-            payloads.append(self._extract_payload(cache, plen, toks.shape[1]))
-            prefix, plen = cache, plen + toks.shape[1]
-        qtoks = jnp.asarray(r.question_tokens)[None]
-        logits, cache = self._prefill_fn(self.params, qtoks, prefix, plen)
+            toks = self.corpus.doc_tokens[docs[i]]
+            start = plen
+            _, prefix, plen = self._prefill_segment(toks, prefix, plen)
+            payloads.append(self._extract_payload(prefix, start, len(toks)))
+        logits, cache, plen = self._prefill_segment(
+            r.question_tokens, prefix, plen)
         logits = jax.block_until_ready(logits)
         prefill_time = time.perf_counter() - t1
 
@@ -188,7 +194,7 @@ class RAGServer:
 
         # 4. greedy decode
         toks = [int(jnp.argmax(logits[0, -1]))]
-        total_len = plen + qtoks.shape[1]
+        total_len = plen
         if max_new_tokens > 1:
             toks += self._decode(cache, toks[0], total_len, max_new_tokens - 1)
         ttft = search_time + transfer + prefill_time
@@ -198,6 +204,20 @@ class RAGServer:
             prefill_time=prefill_time, alpha=plan.alpha, beta=plan.beta,
             docs=docs,
         )
+
+    def _prefill_segment(self, tokens, prefix, plen: int):
+        """Prefill one segment (document or question) on top of ``prefix``,
+        in ``prefill_chunk``-token pieces (one call for the whole segment
+        when chunking is off).  Returns (last_logits, cache, new_plen)."""
+        logits = None
+        off = 0
+        for n in prefill_piece_sizes([len(tokens)], self.prefill_chunk):
+            toks = jnp.asarray(tokens[off:off + n])[None]
+            logits, cache = self._prefill_fn(self.params, toks, prefix, plen)
+            prefix, plen = cache, plen + n
+            off += n
+        # a zero-length segment runs no pieces: preserve the prefix chain
+        return logits, prefix, plen
 
     def _extract_payload(self, cache, start: int, length: int):
         if self.cfg.family == "ssm":

@@ -102,6 +102,20 @@ class ServingMetrics:
         self.preemptions = 0
         self.blocks_shared = 0         # tree blocks refcounted into tables
         self.blocks_copied = 0         # unaligned doc tokens re-put privately
+        # chunked/batched prefill accounting
+        # per prefill iteration: (n_chunks_packed, tokens_computed)
+        self.prefill_batches: List[tuple] = []
+        self.prefill_token_budget = 0  # max_prefill_tokens (0 = unbounded)
+        self.chunks_cancelled = 0      # prefills aborted at a chunk boundary
+        self.chunk_tokens_saved = 0    # prefill tokens NOT computed thanks to
+                                       # mid-prefill cancellation
+
+    def record_prefill_batch(self, n_chunks: int, n_tokens: int) -> None:
+        self.prefill_batches.append((n_chunks, n_tokens))
+
+    def record_chunk_cancel(self, tokens_saved: int) -> None:
+        self.chunks_cancelled += 1
+        self.chunk_tokens_saved += int(tokens_saved)
 
     def timeline(self, req_id: int, arrival: float) -> RequestTimeline:
         tl = self.timelines.get(req_id)
@@ -123,6 +137,9 @@ class ServingMetrics:
         decode_batches = [b for k, b in self.iterations if k == "decode"]
         n_prefills = sum(1 for k, _ in self.iterations if k == "prefill")
         spec_hits = sum(1 for t in done if t.speculative_hit)
+        chunk_counts = [c for c, _ in self.prefill_batches]
+        chunk_tokens = [t for _, t in self.prefill_batches]
+        budget = self.prefill_token_budget
         return {
             "completed": len(done),
             "ttft": percentiles([t.ttft for t in done]),
@@ -140,6 +157,15 @@ class ServingMetrics:
             "speculative_prefills": self.spec_prefills,
             "wasted_prefills": self.wasted_prefills,
             "preemptions": self.preemptions,
+            "prefill_chunks": int(sum(chunk_counts)),
+            "prefill_batch_occupancy": (float(np.mean(chunk_counts))
+                                        if chunk_counts else 0.0),
+            "max_prefill_batch": max(chunk_counts, default=0),
+            "prefill_token_fill": (
+                float(np.mean(chunk_tokens)) / budget
+                if budget > 0 and chunk_tokens else 0.0),
+            "chunks_cancelled": self.chunks_cancelled,
+            "chunk_tokens_saved": self.chunk_tokens_saved,
             "blocks_shared": self.blocks_shared,
             "blocks_copied": self.blocks_copied,
             "doc_hit_rate": (sum(t.hit_docs for t in done)
@@ -168,6 +194,12 @@ class ServingMetrics:
             f"{s['speculative_prefills']} launched / "
             f"{s['wasted_prefills']} wasted",
             f"preemptions             : {s['preemptions']}",
+            f"prefill chunks          : {s['prefill_chunks']} run / "
+            f"{s['chunks_cancelled']} cancelled mid-prefill / "
+            f"{s['chunk_tokens_saved']} tokens saved",
+            f"prefill batch occupancy : mean {s['prefill_batch_occupancy']:.2f} "
+            f"max {s['max_prefill_batch']} "
+            f"fill {s['prefill_token_fill']:.2f}",
             f"paged blocks            : {s['blocks_shared']} shared / "
             f"{s['blocks_copied']} copied",
             f"doc hit rate            : {s['doc_hit_rate']:.2%}",

@@ -9,9 +9,14 @@ concurrent requests, with
     ``SpeculativeController``'s per-stage decisions actually launch and
     terminate speculative prefills that overlap the remaining search
     (paper §5.3, Algorithm 2);
-  * one engine iteration at a time: a single (possibly speculative) prefill
-    picked by the cache-aware ``ReorderQueue``, or ONE batched decode step
-    for every running request;
+  * one engine iteration at a time: a *chunked, ragged-batched* prefill
+    iteration — continuations of in-flight chunked prefills plus newly
+    admitted jobs picked by the cache-aware ``ReorderQueue``, packed up to
+    ``max_prefill_tokens`` — or ONE batched decode step for every running
+    request.  A prefill split into ``prefill_chunk``-token pieces carries
+    its partial KV across iterations in the paged store, and stale
+    speculation is cancelled *between* chunks (the partial KV is freed and
+    the remaining chunk tokens are never computed);
   * batched decode through the ``PagedKVStore``: each running request owns a
     block table; knowledge-tree document segments are REFCOUNT-SHARED into
     the table when block-aligned (copied into private blocks otherwise), and
@@ -22,7 +27,11 @@ concurrent requests, with
 
 Clock semantics: the runtime keeps a virtual clock (seconds).  Engine
 iterations advance it by their *measured* wall time (real JAX compute;
-prefill shapes still jit-compile on first occurrence); retrieval stages
+prefill shapes still jit-compile on first occurrence — NOTE that chunked
+prefill multiplies unique (prefix_len, piece) shapes, so on this CPU-tiny
+setup small chunk sizes are compile-dominated and chunked-mode latency
+numbers include those compiles, like every prefill here; a production
+deployment would bucket prefix lengths); retrieval stages
 advance their own per-request lanes by max(measured stage wall time,
 analytic stage cost) — search runs on host CPUs concurrently with the
 accelerator, which is the paper's testbed overlap model.  TTFT is therefore
@@ -56,7 +65,7 @@ from repro.retrieval.corpus import Corpus, Request
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import (DECODE, PREEMPT, PREFILL,
                                      ContinuousBatchScheduler, PagedAdmission,
-                                     SchedulerConfig)
+                                     SchedulerConfig, prefill_piece_sizes)
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
@@ -105,6 +114,26 @@ class _PrefillResult:
 
 
 @dataclasses.dataclass
+class _ChunkState:
+    """Engine-side state of an in-flight chunked prefill: plan, execution
+    cursor over the to-be-computed segments, remaining piece sizes, and the
+    partial KV paged into the store between iterations."""
+    plan: object                    # RequestPlan
+    segs: List[np.ndarray]          # token arrays: uncached docs + question
+    doc_bounds: List[Tuple[int, int]]  # (abs_start, length) per uncached doc
+    pieces: List[int]               # remaining piece sizes (shared splitter)
+    total: int                      # beta tokens in all pieces at start
+    seg_idx: int = 0
+    seg_off: int = 0
+    plen: int = 0                   # absolute tokens prefixed so far
+    prefix_hit: Optional[dict] = None  # dense cached-prefix KV (alpha tokens)
+    partial_seg: Optional[object] = None  # PagedSegment of computed tokens
+    cache: Optional[dict] = None    # dense full-seq cache, set when the
+                                    # last piece completes (commit/paginate)
+    logits: Optional[object] = None
+
+
+@dataclasses.dataclass
 class _Job:
     req: "_ReqRun"
     docs: Tuple[int, ...]
@@ -112,6 +141,7 @@ class _Job:
     enqueued: float
     cancelled: bool = False
     started: float = -1.0
+    cs: Optional[_ChunkState] = None
 
 
 @dataclasses.dataclass
@@ -163,6 +193,8 @@ class ContinuousRuntime:
         speculative: bool = True,
         max_batch: int = 4,
         max_prefill_bs: int = 4,
+        prefill_chunk: int = 0,
+        max_prefill_tokens: int = 0,
         block_size: int = 16,
         n_blocks: Optional[int] = None,
         search_time_scale: float = 1.0,
@@ -203,9 +235,13 @@ class ContinuousRuntime:
         self.sched: ContinuousBatchScheduler[_Job] = ContinuousBatchScheduler(
             SchedulerConfig(max_batch=max_batch,
                             max_prefill_bs=max_prefill_bs,
-                            reorder=reorder, reorder_window=reorder_window),
+                            reorder=reorder, reorder_window=reorder_window,
+                            prefill_chunk=prefill_chunk,
+                            max_prefill_tokens=max_prefill_tokens),
             viable=self._job_viable, admit=self._job_admissible)
         self.metrics = ServingMetrics()
+        self.metrics.prefill_token_budget = max_prefill_tokens
+        self._partial_jobs: List[_Job] = []   # jobs with live chunk state
         self._prefill_fn = jax.jit(
             lambda p, toks, pc, pl: M.prefill(cfg, p, {"tokens": toks},
                                               prefix_cache=pc, prefix_len=pl),
@@ -360,6 +396,7 @@ class ContinuousRuntime:
 
     def _engine_kick(self) -> None:
         while not self.engine_busy:
+            self._sweep_stale_partials()
             self.admission.invalidate()   # fresh resource snapshot per kick
             if self._force_decode and self.running:
                 # a pagination just failed on shared-block pressure: run one
@@ -372,7 +409,7 @@ class ContinuousRuntime:
             act = self.sched.next_action(len(self.running),
                                          refresh=self._job_lens)
             if act.kind == PREFILL:
-                self._start_prefill(act.item)
+                self._start_prefill_batch(act.chunks)
                 return
             if act.kind == DECODE:
                 self._start_decode()
@@ -381,6 +418,16 @@ class ContinuousRuntime:
                 self._preempt_one()
                 continue               # resources freed; re-evaluate
             return                     # IDLE
+
+    def _sweep_stale_partials(self) -> None:
+        """Chunk-boundary cancellation: a kick only runs between engine
+        iterations, so any in-flight chunked prefill whose job went stale
+        (terminated speculation, finished request) is aborted HERE — partial
+        KV freed, hit nodes unpinned, remaining chunk tokens never computed
+        (Alg. 2 "terminate after the current iteration", at chunk grain)."""
+        for job in [j for j in self._partial_jobs
+                    if not self._job_viable(j)]:
+            self._abort_chunked(job)
 
     def _preempt_one(self) -> None:
         """Free the youngest running request and send it back to prefill
@@ -402,56 +449,206 @@ class ContinuousRuntime:
         cached, compute = self._job_lens(job)
         self.sched.submit(job, cached, compute)
 
-    # ---- prefill ------------------------------------------------------
+    # ---- chunked + batched prefill -------------------------------------
 
-    def _start_prefill(self, job: _Job) -> None:
+    def _start_prefill_batch(self, chunks) -> None:
+        """One engine iteration: execute the next chunk of every job the
+        scheduler packed (ragged — chunk sizes differ per job).  Real
+        compute is measured and billed as one iteration on the virtual
+        clock; commit / first-token decisions happen at the completion
+        event, so retrieval stages landing mid-iteration cancel at the
+        chunk boundary, never mid-chunk."""
+        self.engine_busy = True
+        t0 = time.perf_counter()
+        outcomes = []                  # (job, finished)
+        executed = 0
+        for ch in chunks:
+            job = ch.item
+            if not self._job_viable(job):
+                # went stale in this very event-loop instant; nothing ran
+                if job.cs is not None:
+                    self._abort_chunked(job)
+                else:
+                    self.sched.abort_prefill(job)
+                continue
+            if job.cs is None:
+                self._begin_chunked(job)
+            n = self._run_chunk(job)
+            if n < 0:
+                continue               # paged partial hit OutOfBlocks: job
+                                       # was aborted + requeued in-place
+            executed += n
+            outcomes.append((job, not job.cs.pieces))
+        dt = time.perf_counter() - t0
+        if outcomes:
+            # all-stale batches (every chunk went stale in this event-loop
+            # instant) executed nothing: don't record a phantom iteration
+            self.metrics.record_iteration("prefill", 1)
+            self.metrics.record_prefill_batch(len(outcomes), executed)
+        self._push(self.now + dt, "prefill_batch_done", outcomes)
+
+    def _begin_chunked(self, job: _Job) -> None:
+        """First chunk: plan the request, promote the hit prefix, and build
+        the execution cursor.  Piece sizes come from the shared splitter so
+        runtime, simulator and sequential engine chunk identically."""
         st = job.req
         job.started = self.now
         st.start_by_docs.setdefault(job.docs, self.now)
-        self.engine_busy = True
-        self.sched.note_prefill_start()
-        self.metrics.record_iteration("prefill", 1)
-        t0 = time.perf_counter()
         doc_tokens = [int(self.corpus.doc_lengths[d]) for d in job.docs]
         plan = self.controller.plan(job.docs, doc_tokens,
                                     len(st.r.question_tokens))
-        self.controller.promote(plan)   # host->device pull, measured below
-        # segment-chained prefill: cached prefix -> each uncached doc ->
-        # question (identical math to the sequential engine)
-        prefix, plen = self._assemble_prefix(plan.hit_nodes)
-        payloads = []
-        for i in range(len(plan.hit_nodes), len(job.docs)):
-            toks = jnp.asarray(self.corpus.doc_tokens[job.docs[i]])[None]
-            _, cache = self._prefill_fn(self.params, toks, prefix, plen)
-            payloads.append((plen, int(toks.shape[1]), cache))
-            prefix, plen = cache, plen + int(toks.shape[1])
-        qtoks = jnp.asarray(st.r.question_tokens)[None]
-        logits, cache = self._prefill_fn(self.params, qtoks, prefix, plen)
-        logits = jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        res = _PrefillResult(
-            docs=job.docs, cache=cache,
-            first_token=int(jnp.argmax(logits[0, -1])),
-            total_len=plen + int(qtoks.shape[1]),
-            alpha=plan.alpha, beta=plan.beta, hit_docs=plan.hit_docs,
-            speculative=job.speculative, started=job.started)
-        self._push(self.now + dt, "prefill_done", (job, plan, payloads, res))
+        self.controller.promote(plan)   # host->device pull
+        segs = [np.asarray(self.corpus.doc_tokens[job.docs[i]])
+                for i in range(len(plan.hit_nodes), len(job.docs))]
+        bounds, start = [], plan.alpha
+        for s in segs:
+            bounds.append((start, len(s)))
+            start += len(s)
+        segs.append(np.asarray(st.r.question_tokens))
+        pieces = prefill_piece_sizes([len(s) for s in segs],
+                                     self.sched.config.prefill_chunk)
+        if not pieces:
+            raise ValueError(
+                f"request {st.r.req_id}: nothing to prefill (empty question "
+                f"and fully cached documents) — no logits can be produced")
+        prefix_hit, plen = self._assemble_prefix(plan.hit_nodes)
+        job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
+                             pieces=pieces, total=sum(pieces),
+                             plen=plen, prefix_hit=prefix_hit)
+        self._partial_jobs.append(job)
 
-    def _on_prefill_done(self, payload) -> None:
-        job, plan, payloads, res = payload
-        st = job.req
-        self.engine_busy = False
-        self.sched.note_prefill_end()
-        if job.cancelled or st.state != WAITING:
-            for n in plan.hit_nodes:      # unpin without committing
-                n.pinned = False
-            self.metrics.wasted_prefills += 1
+    def _chunk_prefix(self, cs: _ChunkState) -> Tuple[Optional[dict], int]:
+        """KV prefix for the next piece: the dense cached-prefix alone
+        (first iteration), plus the partial KV gathered back out of the
+        paged store on continuation iterations."""
+        if cs.partial_seg is None:
+            return cs.prefix_hit, cs.plen
+        k, v = self.store.gather(cs.partial_seg)
+        if cs.prefix_hit is None:
+            return {"k": k, "v": v}, cs.plen
+        return {"k": jnp.concatenate([cs.prefix_hit["k"], k], axis=2),
+                "v": jnp.concatenate([cs.prefix_hit["v"], v], axis=2)}, cs.plen
+
+    def _run_chunk(self, job: _Job) -> int:
+        """Execute the next piece of ``job``'s prefill.  A piece never spans
+        a segment boundary when chunking is enabled; with chunking disabled
+        the single piece walks every segment (legacy one-iteration prefill).
+        Returns tokens computed, or -1 if paging the partial KV failed and
+        the job was aborted + requeued."""
+        cs = job.cs
+        n = cs.pieces.pop(0)
+        multi_iter = bool(cs.pieces) or cs.partial_seg is not None
+        prefix, plen = self._chunk_prefix(cs)
+        plen0, left = plen, n
+        logits = cache = None
+        while left > 0:
+            seg = cs.segs[cs.seg_idx]
+            take = min(left, len(seg) - cs.seg_off)
+            toks = jnp.asarray(seg[cs.seg_off:cs.seg_off + take])[None]
+            logits, cache = self._prefill_fn(self.params, toks, prefix, plen)
+            prefix, plen = cache, plen + take
+            cs.seg_off += take
+            left -= take
+            while cs.seg_idx < len(cs.segs) and \
+                    cs.seg_off >= len(cs.segs[cs.seg_idx]):
+                cs.seg_idx += 1
+                cs.seg_off = 0
+        jax.block_until_ready(logits)
+        cs.plen = plen
+        cs.logits = logits
+        if not cs.pieces or not multi_iter:
+            # final piece (or legacy single-iteration prefill): the carried
+            # cache is the full sequence — keep it dense for commit/paginate
+            cs.cache = cache
         else:
-            self._commit_payloads(plan, payloads)
+            # page the newly computed KV into the store so the only live
+            # copy of the partial prefill is paged (cancellation frees it)
+            k = cache["k"][:, :, plen0:plen]
+            v = cache["v"][:, :, plen0:plen]
+            nb = self.store.pool.blocks_for_tokens(plen - plen0)
+            if not self._reclaim_blocks(nb):
+                self._abort_chunked(job, requeue=True)
+                return -1
+            try:
+                if cs.partial_seg is None:
+                    cs.partial_seg = self.store.put(k, v)
+                else:
+                    self.store.append(cs.partial_seg, k, v)
+            except OutOfBlocks:
+                self._abort_chunked(job, requeue=True)
+                return -1
+        return n
+
+    def _on_prefill_batch_done(self, payload) -> None:
+        self.engine_busy = False
+        for job, finished in payload:
+            st = job.req
+            cs = job.cs
+            if cs is None:
+                continue               # aborted mid-iteration (requeue path)
+            stale = job.cancelled or st.state != WAITING
+            if not finished:
+                if stale:
+                    self._abort_chunked(job)
+                else:
+                    self.sched.note_chunk_done(job, cs.pieces)
+                continue
+            # prefill complete
+            self.sched.note_chunk_done(job, [])
+            self._drop_chunk_state(job)
+            if stale:
+                for n in cs.plan.hit_nodes:   # unpin without committing
+                    n.pinned = False
+                self.metrics.wasted_prefills += 1
+                continue
+            res = _PrefillResult(
+                docs=job.docs, cache=cs.cache,
+                first_token=int(jnp.argmax(cs.logits[0, -1])),
+                total_len=cs.plen,
+                alpha=cs.plan.alpha, beta=cs.plan.beta,
+                hit_docs=cs.plan.hit_docs,
+                speculative=job.speculative, started=job.started)
+            payloads = [(start, length, cs.cache)
+                        for start, length in cs.doc_bounds]
+            self._commit_payloads(cs.plan, payloads)
             st.results[job.docs] = res
             if st.final_docs is not None and job.docs == st.final_docs:
                 self._first_token(st, res, max(self.now, st.tl.search_end))
         self._engine_kick()
+
+    def _drop_chunk_state(self, job: _Job) -> None:
+        cs = job.cs
+        if cs is not None and cs.partial_seg is not None:
+            self.store.free(cs.partial_seg)
+            cs.partial_seg = None
+        job.cs = None
+        if job in self._partial_jobs:
+            self._partial_jobs.remove(job)
+
+    def _abort_chunked(self, job: _Job, requeue: bool = False) -> None:
+        """Mid-prefill cancellation: free the partial KV, unpin the hit
+        prefix, and account the chunk tokens that were never computed."""
+        cs = job.cs
+        saved = sum(cs.pieces) if cs is not None else 0
+        if cs is not None:
+            for n in cs.plan.hit_nodes:
+                n.pinned = False
+        self._drop_chunk_state(job)
+        self.sched.abort_prefill(job)
+        if not requeue:
+            # a requeued job recomputes everything later — only genuine
+            # cancellations (stale speculation / finished request) save work
+            self.metrics.record_chunk_cancel(saved)
+        if requeue:
+            # paged-pool pressure, not staleness: recompute later — force a
+            # decode iteration first so running requests free blocks
+            job.cancelled = True
+            self._force_decode = True
+            redo = _Job(req=job.req, docs=job.docs,
+                        speculative=job.speculative, enqueued=self.now)
+            job.req.jobs.append(redo)
+            cached, compute = self._job_lens(redo)
+            self.sched.submit(redo, cached, compute)
 
     def _commit_payloads(self, plan, payloads) -> None:
         """Page the new per-doc KV segments into the store and insert them
@@ -469,8 +666,13 @@ class ContinuousRuntime:
                 break
         inserted = self.controller.commit(
             plan, segs, max_docs=len(plan.hit_nodes) + len(segs))
-        for seg in segs[len(inserted):]:   # insert stopped early: free tail
-            self.store.free(seg)
+        # free every segment the tree did not take: the tail when insert
+        # stopped early, and duplicates when a concurrent chunked prefill
+        # committed the same doc path first (the tree keeps the incumbent)
+        kept = {id(n.payload_gpu) for n in inserted}
+        for seg in segs:
+            if id(seg) not in kept:
+                self.store.free(seg)
 
     def _reclaim_blocks(self, needed: int) -> bool:
         """Evict unpinned tree leaves (PGDSF order, shared Alg. 1 loop)

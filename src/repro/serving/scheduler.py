@@ -1,10 +1,22 @@
-"""Iteration-level continuous-batching scheduler (vLLM/Orca-style).
+"""Iteration-level continuous-batching scheduler (vLLM/Orca-style) with
+chunk-granular prefill.
 
-One decision per engine iteration: start ONE prefill (possibly speculative,
-picked from the cache-aware ``ReorderQueue``) or run ONE batched decode step
-for every running request.  Prefill is preferred while the decode batch has
-room — it adds a request to the batch, which is what keeps the GPU busy
-under load — and decode drains the batch otherwise.
+One decision per engine iteration: run a PREFILL iteration (a *batch* of
+prefill chunks — continuations of in-flight chunked prefills plus newly
+admitted jobs, packed raggedly up to ``max_prefill_tokens``) or ONE batched
+decode step for every running request.  Prefill is preferred while the
+decode batch has room — it adds a request to the batch, which is what keeps
+the GPU busy under load — and decode drains the batch otherwise.
+
+Chunked prefill (Sarathi-style, paper Alg. 2 "terminate after the current
+iteration"): a prefill is split into ``prefill_chunk``-token pieces and the
+engine carries the KV across iterations.  Between chunks the scheduler
+re-decides, so stale speculation is cancelled mid-prefill (the engine frees
+the partial KV) instead of wasting the whole prefill, and decode interleaves
+with long prefills.  Chunk pieces NEVER span segment (document/question)
+boundaries — see ``prefill_piece_sizes`` — which keeps every per-segment
+attention call shape-identical to the unchunked engine and therefore the
+greedy tokens bit-identical.
 
 The scheduler is engine-agnostic: queue items are opaque; the engine supplies
 ``viable`` (not cancelled / request not finished) and ``admit`` (resource
@@ -12,10 +24,19 @@ admission) callbacks.  Both the real JAX runtime (``serving.runtime``) and
 the discrete-event simulator (``serving.simulator``) drive THIS code, so the
 simulated policy and the executed policy cannot drift.
 
+Chunk protocol: ``next_action`` returns ``Action(PREFILL, chunks=[...])``.
+Each ``PrefillChunk`` is a token allowance for one item; ``first=True``
+means the engine has not started this item yet (it must plan the request
+and report the authoritative remaining piece sizes).  After executing a
+chunk the engine calls ``note_chunk_done(item, remaining_pieces)`` (empty =
+prefill complete) or ``abort_prefill(item)`` if the item went stale at the
+chunk boundary.  Until the first report, a popped item is tracked as a
+partial with unknown pieces and is not re-issued.
+
 Admission control is by paged-KV-block budget and knowledge-tree pin budget
-(``PagedAdmission``): a request is admitted only if the block pool can hold
-its full context plus decode reservation and the tree's GPU tier can take its
-to-be-computed document states on top of currently pinned bytes.  When an
+(``PagedAdmission``); admission is checked once, when a job's FIRST chunk is
+admitted — a partial prefill already holds its resources, so continuations
+bypass admission (finishing is the only way to release them).  When an
 admissible-resource-starved request has been skipped ``preempt_after_skips``
 times, the scheduler asks the engine to preempt (engine picks the victim —
 youngest running request — frees its blocks, and requeues it).
@@ -23,7 +44,7 @@ youngest running request — frees its blocks, and requeues it).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Generic, Optional, TypeVar
+from typing import Callable, Generic, List, Optional, Sequence, TypeVar
 
 from repro.core.reorder import ReorderQueue
 
@@ -35,6 +56,36 @@ PREEMPT = "preempt"
 IDLE = "idle"
 
 
+def prefill_piece_sizes(seg_lens: Sequence[int], chunk: int) -> List[int]:
+    """Split a prefill into per-iteration piece sizes (tokens).
+
+    seg_lens: token count of each to-be-computed segment, in order (uncached
+    documents, then the question).  chunk <= 0 disables chunking: the whole
+    prefill is one piece (one engine iteration, the legacy behaviour).
+
+    With chunking enabled, every segment is split independently into
+    ceil(len/chunk) pieces — pieces never span a segment boundary, so the
+    attention calls that compute a given document's KV are a pure function
+    of (document length, chunk size), independent of how much prefix was
+    cached.  That is what keeps chunked greedy tokens bit-identical to the
+    unchunked engine.
+
+    Shared by the runtime, the simulator and the sequential engine — the
+    single source of chunk boundaries (no duplicated chunking logic).
+    """
+    lens = [int(n) for n in seg_lens if n > 0]
+    if not lens:
+        return []
+    if chunk <= 0:
+        return [sum(lens)]
+    out: List[int] = []
+    for n in lens:
+        out.extend([chunk] * (n // chunk))
+        if n % chunk:
+            out.append(n % chunk)
+    return out
+
+
 @dataclasses.dataclass
 class SchedulerConfig:
     max_batch: int = 4             # decode batch slots (paper testbed: 4)
@@ -42,12 +93,34 @@ class SchedulerConfig:
     reorder: bool = True           # cache-aware reordering (§5.2)
     reorder_window: int = 32       # starvation window
     preempt_after_skips: int = 8   # admission-starved skips before preemption
+    prefill_chunk: int = 0         # tokens per prefill piece (0 = whole
+                                   # prefill in one engine iteration)
+    max_prefill_tokens: int = 0    # ragged prefill-batch token budget per
+                                   # iteration (0 = one request per iteration)
+
+
+@dataclasses.dataclass
+class PrefillChunk(Generic[T]):
+    item: T
+    tokens: int                    # planned token allowance this iteration
+    first: bool                    # engine must plan the request (chunk 0)
 
 
 @dataclasses.dataclass
 class Action(Generic[T]):
     kind: str                      # PREFILL | DECODE | PREEMPT | IDLE
-    item: Optional[T] = None       # the prefill job for PREFILL
+    item: Optional[T] = None       # first prefill job (back-compat)
+    chunks: List[PrefillChunk] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Partial(Generic[T]):
+    """In-flight chunked prefill.  ``pending`` is the engine-reported list of
+    remaining piece sizes; empty means the engine has not reported yet (the
+    item was just popped) and the item must not be re-issued."""
+    item: T
+    pending: List[int]
+    reported: bool = False
 
 
 class ContinuousBatchScheduler(Generic[T]):
@@ -64,6 +137,7 @@ class ContinuousBatchScheduler(Generic[T]):
         self.queue: ReorderQueue[T] = ReorderQueue(
             config.reorder_window, enabled=config.reorder)
         self.prefills_running = 0
+        self._partials: List[_Partial[T]] = []
 
     # ---- queue interface ---------------------------------------------------
 
@@ -79,6 +153,31 @@ class ContinuousBatchScheduler(Generic[T]):
 
     def note_prefill_end(self) -> None:
         self.prefills_running -= 1
+
+    # ---- chunk protocol ----------------------------------------------------
+
+    def note_chunk_done(self, item: T, pending: Sequence[int]) -> None:
+        """Engine report after executing one chunk of ``item``: the
+        authoritative remaining piece sizes.  Empty = prefill complete."""
+        for p in self._partials:
+            if p.item is item:
+                if pending:
+                    p.pending = [int(n) for n in pending]
+                    p.reported = True
+                else:
+                    self._partials.remove(p)
+                    self.prefills_running -= 1
+                return
+
+    def abort_prefill(self, item: T) -> None:
+        """Engine report that an in-flight chunked prefill was cancelled at a
+        chunk boundary (stale speculation / finished request / resource
+        pressure).  The engine has already freed the partial KV."""
+        for p in self._partials:
+            if p.item is item:
+                self._partials.remove(p)
+                self.prefills_running -= 1
+                return
 
     # ---- the per-iteration decision ---------------------------------------
 
@@ -97,16 +196,14 @@ class ContinuousBatchScheduler(Generic[T]):
         if n_running < self.config.max_batch:
             if refresh is not None:
                 self.queue.refresh(refresh)
-            if self.admit is None:
-                job = self.queue.pop(self.viable)
-                return Action(PREFILL, job) if job is not None \
-                    else (Action(DECODE) if n_running else Action(IDLE))
             # admission verdicts are O(resource-state) to compute; evaluate
             # once per entry per round and reuse between the starvation
             # bump and the pop filter
             verdicts = {}
 
             def adm(it):
+                if self.admit is None:
+                    return True
                 key = id(it)
                 if key not in verdicts:
                     verdicts[key] = self.admit(it)
@@ -120,18 +217,64 @@ class ContinuousBatchScheduler(Generic[T]):
             # engine preempts youngest-first, the oldest running request
             # always advances, which is what guarantees global progress
             # (no preemption ping-pong when the pool only fits one request)
-            if (n_running > 1
+            if (self.admit is not None and n_running > 1
                     and self.queue.max_skipped(blocked)
                     >= self.config.preempt_after_skips):
                 # a request is starving on resources only: make room
                 return Action(PREEMPT)
-            job = self.queue.pop(lambda it: self.viable(it) and adm(it))
-            if job is not None:
-                # pop aged every remaining entry (incl. blocked ones)
-                return Action(PREFILL, job)
-            # nothing popped, so nothing aged: bump blocked entries here —
-            # exactly one increment per round either way
-            self.queue.bump_skipped(blocked)
+
+            budget = self.config.max_prefill_tokens or 0
+            chunks: List[PrefillChunk] = []
+            used = 0
+            # 1. continue in-flight chunked prefills, oldest first — a
+            # partial already holds its blocks/pins, so finishing it is
+            # always the cheapest way to free resources.  Non-viable
+            # partials are skipped here; the engine sweeps and aborts them
+            # at its next chunk boundary.
+            for p in self._partials:
+                if not p.reported or not p.pending:
+                    continue           # awaiting the engine's first report
+                if not self.viable(p.item):
+                    continue
+                n = p.pending[0]
+                if chunks and (budget <= 0 or used + n > budget):
+                    break
+                chunks.append(PrefillChunk(p.item, n, first=False))
+                used += n
+                if budget <= 0:
+                    break              # one request per iteration
+            # 2. admit new jobs while the ragged batch has budget room
+            popped = False
+            while not chunks or (budget > 0 and used < budget):
+                cand = self.queue.peek_entry(
+                    lambda it: self.viable(it) and adm(it))
+                if cand is None:
+                    break
+                chunk_cap = self.config.prefill_chunk
+                n = max(1, min(cand.compute_len, chunk_cap)
+                        if chunk_cap > 0 else cand.compute_len)
+                if chunks and budget > 0 and used + n > budget:
+                    break              # first chunk would not fit the budget
+                # entries age exactly once per scheduling ROUND, however
+                # many jobs a ragged batch packs
+                self.queue.remove(cand, age=not popped)
+                popped = True
+                self._partials.append(_Partial(cand.item, []))
+                self.prefills_running += 1
+                chunks.append(PrefillChunk(cand.item, n, first=True))
+                used += n
+                if budget <= 0:
+                    break              # one request per iteration
+            if not popped:
+                # nothing popped, so nothing aged: bump blocked entries here
+                # — exactly one increment per round either way, INCLUDING
+                # continuation-only rounds of a chunked prefill (a blocked
+                # request was passed over then too; freezing its skip count
+                # for a whole chunked prefill would stall the starvation /
+                # preemption windows)
+                self.queue.bump_skipped(blocked)
+            if chunks:
+                return Action(PREFILL, chunks[0].item, chunks)
         if n_running > 0:
             return Action(DECODE)
         return Action(IDLE)

@@ -7,18 +7,21 @@ throughput claims are validated on a CPU-only container (DESIGN.md §7).
 
 Engine model (matches the paper's testbed semantics):
   * vector search runs on host CPUs, staged, one lane per request;
-  * the LLM engine serves one iteration at a time: either ONE prefill
-    (vLLM-style iteration-level scheduling, paper max batch 4) or one decode
-    step for the whole running batch;
-  * prefill latency = host->GPU promotion transfer + T(alpha, beta);
+  * the LLM engine serves one iteration at a time: a chunked, ragged-batched
+    prefill iteration (pieces of ``prefill_chunk`` tokens packed up to
+    ``max_prefill_tokens``) or one decode step for the whole running batch;
+  * prefill latency = host->GPU promotion transfer + T(alpha, beta),
+    apportioned per chunk token;
   * a speculative prefill whose documents go stale is cancelled if still
-    queued; if running it completes (the paper cancels "after the current
-    iteration" — one prefill == one iteration here).
+    queued, and cancelled *between chunks* if running (the paper cancels
+    "after the current iteration"); the remaining chunk tokens are saved.
 
-The per-iteration decision (prefill vs decode, cache-aware job pick) is NOT
-local code: it is the shared ``serving.scheduler.ContinuousBatchScheduler``,
-the same policy object the real JAX runtime (``serving.runtime``) executes,
-so simulated and real scheduling cannot drift.
+The per-iteration decision (prefill vs decode, chunk packing, cache-aware
+job pick) is NOT local code: it is the shared
+``serving.scheduler.ContinuousBatchScheduler`` and its chunk protocol, the
+same policy object the real JAX runtime (``serving.runtime``) executes, so
+simulated and real scheduling cannot drift — including chunk boundaries,
+which come from the shared ``prefill_piece_sizes`` splitter.
 """
 from __future__ import annotations
 
@@ -36,7 +39,7 @@ from repro.core.speculative import SpecState, SpeculativeController
 from repro.retrieval.corpus import Corpus, Request
 from repro.serving.scheduler import (DECODE, PREFILL,
                                      ContinuousBatchScheduler,
-                                     SchedulerConfig)
+                                     SchedulerConfig, prefill_piece_sizes)
 
 
 @dataclasses.dataclass
@@ -59,6 +62,8 @@ class SimConfig:
     prefill_chunk: int = 512       # tokens per prefill iteration (vLLM-style
                                    # iteration-level scheduling; stale
                                    # speculation cancels between iterations)
+    max_prefill_tokens: int = 0    # ragged prefill-batch token budget per
+                                   # iteration (0 = one request per iteration)
 
 
 @dataclasses.dataclass
@@ -75,6 +80,11 @@ class SimMetrics:
     wasted_prefills: int
     gpu_evictions: int
     swap_out_bytes: int
+    chunks_cancelled: int = 0          # prefills aborted at a chunk boundary
+    chunk_tokens_saved: int = 0        # prefill tokens never computed thanks
+                                       # to mid-prefill cancellation
+    prefill_iterations: int = 0
+    avg_prefill_batch: float = 0.0     # chunks packed per prefill iteration
     ttfts: List[float] = dataclasses.field(default_factory=list, repr=False)
 
 
@@ -102,6 +112,9 @@ class _Job:
     plan: Optional[RequestPlan] = None
     started: float = -1.0
     start_candidate: Optional[float] = None
+    # chunked-prefill state (set when the first chunk executes)
+    pending: List[int] = dataclasses.field(default_factory=list)
+    sec_per_token: float = 0.0
 
 
 @dataclasses.dataclass
@@ -150,7 +163,9 @@ class RAGSimulator:
             SchedulerConfig(max_batch=cfg.max_batch,
                             max_prefill_bs=cfg.max_prefill_bs,
                             reorder=cfg.reorder,
-                            reorder_window=cfg.reorder_window),
+                            reorder_window=cfg.reorder_window,
+                            prefill_chunk=cfg.prefill_chunk,
+                            max_prefill_tokens=cfg.max_prefill_tokens),
             viable=lambda job: not job.cancelled and not job.req.done)
         self.queue = self.sched.queue
         self.decode_running: List[_ReqState] = []
@@ -160,6 +175,10 @@ class RAGSimulator:
         self._seq = itertools.count()
         self.sched_times: List[float] = []
         self._all_states: List[_ReqState] = []
+        self._partial_jobs: List[_Job] = []
+        self.chunks_cancelled = 0
+        self.chunk_tokens_saved = 0
+        self.prefill_batches: List[int] = []   # chunks packed per iteration
 
     # ---- event plumbing ---------------------------------------------------
 
@@ -233,15 +252,33 @@ class RAGSimulator:
     def _engine_maybe_start(self) -> None:
         if self.engine_busy:
             return
+        self._sweep_stale_partials()
         import time as _t
         t0 = _t.perf_counter()
         act = self.sched.next_action(len(self.decode_running),
                                      refresh=self._job_lens)
         self.sched_times.append(_t.perf_counter() - t0)
         if act.kind == PREFILL:
-            self._start_prefill(act.item)
+            self._start_prefill_batch(act.chunks)
         elif act.kind == DECODE:
             self._start_decode()
+
+    def _sweep_stale_partials(self) -> None:
+        """Chunk-boundary cancellation (Alg. 2 at chunk grain): abort any
+        in-flight chunked prefill whose job went stale between iterations —
+        unpin its hit prefix and never compute the remaining chunks."""
+        for job in [j for j in self._partial_jobs
+                    if j.cancelled or j.req.done]:
+            self._abort_chunked(job)
+
+    def _abort_chunked(self, job: _Job) -> None:
+        for n in job.plan.hit_nodes:      # unpin without inserting partials
+            n.pinned = False
+        self.chunks_cancelled += 1
+        self.chunk_tokens_saved += sum(job.pending)
+        job.pending = []
+        self._partial_jobs.remove(job)
+        self.sched.abort_prefill(job)
 
     def _job_lens(self, job: _Job) -> Tuple[int, int]:
         hit = self.tree.match_prefix(job.docs)
@@ -250,7 +287,36 @@ class RAGSimulator:
             + len(job.req.r.question_tokens)
         return cached, max(total - cached, 1)
 
-    def _start_prefill(self, job: _Job) -> None:
+    def _start_prefill_batch(self, chunks) -> None:
+        """One engine iteration: the next chunk of every job the scheduler
+        packed.  Iteration time = promotion transfers (first chunks) + the
+        analytic compute cost apportioned per chunk token, summed over the
+        ragged batch."""
+        dt = 0.0
+        ran = []
+        for ch in chunks:
+            job = ch.item
+            st = job.req
+            if job.cancelled or st.done:
+                if job.plan is not None:
+                    self._abort_chunked(job)
+                else:
+                    self.sched.abort_prefill(job)
+                continue
+            if job.plan is None:
+                dt += self._begin_chunked(job)
+            n = job.pending.pop(0)
+            dt += n * job.sec_per_token
+            ran.append(job)
+        self.engine_busy = True
+        if ran:                         # all-stale batches executed nothing
+            self.prefill_batches.append(len(ran))
+        self._push(self.now + dt, "prefill_batch_done", ran)
+
+    def _begin_chunked(self, job: _Job) -> float:
+        """Plan + promote on the first chunk; piece sizes come from the
+        shared splitter (same chunk boundaries as the real runtime).
+        Returns the promotion transfer seconds."""
         st = job.req
         doc_tokens = [int(self.corpus.doc_lengths[i]) for i in job.docs]
         plan = self.controller.plan(job.docs, doc_tokens,
@@ -260,6 +326,12 @@ class RAGSimulator:
         compute = self.tree.profiler.estimate(plan.alpha, plan.beta)
         job.plan = plan
         job.started = self.now
+        seg_lens = list(plan.doc_tokens[len(plan.hit_nodes):]) \
+            + [plan.question_tokens]
+        job.pending = prefill_piece_sizes(seg_lens, self.cfg.prefill_chunk) \
+            or [1]
+        job.sec_per_token = compute / max(sum(job.pending), 1)
+        self._partial_jobs.append(job)
         if st.final_docs is not None and job.docs == st.final_docs \
                 and st.final_prefill_first_start < 0:
             st.final_prefill_first_start = self.now
@@ -267,42 +339,45 @@ class RAGSimulator:
             # provisional docs may turn out final; record candidate start
             job.start_candidate = self.now
             st.spec_start_by_docs.setdefault(job.docs, self.now)
-        self.engine_busy = True
-        self.sched.note_prefill_start()
-        # chunked prefill: n iterations, cancellable between them (Alg. 2
-        # "terminate after the current iteration")
-        n_iters = max(1, -(-plan.beta // self.cfg.prefill_chunk))
-        iter_t = compute / n_iters
-        self._push(self.now + transfer + iter_t, "prefill_iter",
-                   (job, 1, n_iters, iter_t))
+        return transfer
 
-    def _on_prefill_iter(self, payload) -> None:
-        job, done_iters, n_iters, iter_t = payload
-        st = job.req
-        if done_iters < n_iters and not job.cancelled and not st.done:
-            self._push(self.now + iter_t, "prefill_iter",
-                       (job, done_iters + 1, n_iters, iter_t))
-            return
-        # finished (or cancelled after the current iteration)
+    def _on_prefill_batch_done(self, ran: List[_Job]) -> None:
         self.engine_busy = False
-        self.sched.note_prefill_end()
-        if done_iters >= n_iters and not job.cancelled:
-            # completed prefills populate the tree even if speculative;
-            # §8 "Large top-k": optionally cache only the leading docs
-            self.controller.commit(job.plan,
-                                   max_docs=self.cfg.cache_top_k or None)
-        else:
-            for n in job.plan.hit_nodes:   # unpin without inserting partials
-                n.pinned = False
-        if not job.cancelled and not st.done:
-            st.prefill_done = self.now
-            st.prefill_docs = job.docs
-            if st.final_docs is not None:
-                if job.docs == st.final_docs:
+        # pass 1: settle every chunk with the scheduler BEFORE any side
+        # effect — _first_token below can re-enter _engine_maybe_start, and
+        # the packed batch's other jobs must already be consistent
+        completed = []
+        for job in ran:
+            st = job.req
+            if job.pending:
+                if job.cancelled or st.done:
+                    self._abort_chunked(job)
+                else:
+                    self.sched.note_chunk_done(job, job.pending)
+                continue
+            # prefill complete (a stale job still finishes its last chunk:
+            # the paper cancels "after the current iteration")
+            self.sched.note_chunk_done(job, [])
+            self._partial_jobs.remove(job)
+            completed.append(job)
+        # pass 2: commits + first tokens
+        for job in completed:
+            st = job.req
+            if not (job.cancelled or st.done):
+                # completed prefills populate the tree even if speculative;
+                # §8 "Large top-k": optionally cache only the leading docs
+                self.controller.commit(job.plan,
+                                       max_docs=self.cfg.cache_top_k or None)
+                st.prefill_done = self.now
+                st.prefill_docs = job.docs
+                if st.final_docs is not None and job.docs == st.final_docs:
                     if st.final_prefill_first_start < 0:
                         st.final_prefill_first_start = job.started
                     self._first_token(st, max(self.now, st.search_end))
                 # else: wasted speculation; final job is queued already
+            else:
+                for n in job.plan.hit_nodes:   # unpin without inserting
+                    n.pinned = False
         self._engine_maybe_start()
 
     def _first_token(self, st: _ReqState, t: float) -> None:
@@ -387,5 +462,10 @@ class RAGSimulator:
             wasted_prefills=wasted,
             gpu_evictions=self.tree.stats["gpu_evictions"],
             swap_out_bytes=self.tree.stats["swap_out_bytes"],
+            chunks_cancelled=self.chunks_cancelled,
+            chunk_tokens_saved=self.chunk_tokens_saved,
+            prefill_iterations=len(self.prefill_batches),
+            avg_prefill_batch=(float(np.mean(self.prefill_batches))
+                               if self.prefill_batches else 0.0),
             ttfts=list(map(float, ttfts)),
         )

@@ -1,7 +1,6 @@
 """Flat-npz checkpointing for arbitrary pytrees (no tensorstore offline)."""
 from __future__ import annotations
 
-import json
 from pathlib import Path
 from typing import Any, Tuple
 

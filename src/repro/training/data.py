@@ -7,7 +7,6 @@ token shards for real runs.
 from __future__ import annotations
 
 import dataclasses
-from pathlib import Path
 from typing import Dict, Iterator, Optional
 
 import numpy as np

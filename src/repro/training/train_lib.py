@@ -1,8 +1,7 @@
 """Causal-LM training step shared by the train driver and the dry-run."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,6 @@ def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
         # gold logit via masked reduction over the (model-sharded) vocab dim:
         # take_along_axis would all-gather the logits shard; this reduces to
         # a scalar psum instead.
-        V = logits.shape[-1]
         vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
                                               logits.ndim - 1)
         gold = jnp.where(vocab_iota == lc[..., None], logits, 0.0).sum(-1)

@@ -6,8 +6,7 @@ pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core.knowledge_tree import (EvictionError, KnowledgeTree, Node,
-                                       POLICIES)
+from repro.core.knowledge_tree import KnowledgeTree
 from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
 
 

@@ -1,5 +1,4 @@
 """Cache-aware reordering (§5.2) + dynamic speculative pipelining (§5.3)."""
-import pytest
 
 from repro.core.reorder import ReorderQueue
 from repro.core.speculative import (SpecState, SpeculativeController,

@@ -2,13 +2,12 @@
 prefill/decode interleaving (shared policy for runtime + simulator)."""
 import dataclasses
 
-import pytest
 
 from repro.core.knowledge_tree import KnowledgeTree
 from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
 from repro.kvcache.paged import BlockPool, PagedKVStore
 from repro.serving.scheduler import (DECODE, IDLE, PREEMPT, PREFILL,
-                                     Action, ContinuousBatchScheduler,
+                                     ContinuousBatchScheduler,
                                      PagedAdmission, SchedulerConfig,
                                      tree_pinned_gpu_bytes)
 

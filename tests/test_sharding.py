@@ -62,7 +62,6 @@ def test_dryrun_machinery_small_mesh():
 
 def test_param_spec_divisibility_fallback():
     """Rules must replicate when dims don't divide the axis."""
-    import jax
     from jax.sharding import PartitionSpec as P
     from repro.configs import get_config
     from repro.launch.sharding import param_spec

@@ -1,5 +1,4 @@
 """Discrete-event simulator: end-to-end behaviour + paper-trend assertions."""
-import numpy as np
 import pytest
 
 from repro.core.profiler import A10G_MISTRAL_7B
