@@ -22,6 +22,7 @@ MODULES = [
     "fig17_policy",
     "fig18_reorder",
     "fig19_speculative",
+    "fig_tiered_cache",
     "tab4_sched_time",
     "throughput_batching",
     "tpot_topk",

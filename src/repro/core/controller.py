@@ -21,8 +21,11 @@ class RequestPlan:
     hit_nodes: List[Node]            # longest cached prefix (in order)
     alpha: int                       # cached tokens (prefix docs)
     beta: int                        # tokens to compute (rest docs + question)
-    promote_bytes: int               # host->GPU bytes for the hit
+    promote_bytes: int               # host/disk->GPU bytes for the hit
     hit_docs: int                    # for the paper's per-doc hit-rate metric
+    # per-tier hit attribution at plan time: alpha tokens split by the tier
+    # each hit node was resident in (gpu, host, disk)
+    hit_tier_tokens: Tuple[int, int, int] = (0, 0, 0)
 
     @property
     def full_len(self) -> int:
@@ -43,6 +46,11 @@ class RAGController:
         alpha = sum(n.n_tokens for n in hit)
         beta = sum(doc_tokens[len(hit):]) + question_tokens
         promote = sum(n.bytes_ for n in hit if not n.in_gpu)
+        tier_tokens = [0, 0, 0]
+        for n in hit:
+            tier_tokens[n.fastest_tier()] += n.n_tokens
+        for name, toks in zip(("gpu", "host", "disk"), tier_tokens):
+            self.tree.stats[f"hit_tokens_{name}"] += toks
         self.total_docs += len(doc_ids)
         self.total_hit_docs += len(hit)
         self.tree.stats["hits" if hit else "misses"] += 1
@@ -55,6 +63,7 @@ class RAGController:
             beta=beta,
             promote_bytes=promote,
             hit_docs=len(hit),
+            hit_tier_tokens=tuple(tier_tokens),
         )
 
     # ---- execution hooks ----------------------------------------------------
@@ -66,12 +75,18 @@ class RAGController:
         try:
             return self.tree.ensure_in_gpu(plan.hit_nodes)
         except EvictionError:
-            # degenerate: cache thrash — drop the hit, full recompute
+            # degenerate: cache thrash — drop the hit, full recompute.
+            # Roll back BOTH tier-attribution channels (the plan's own split
+            # and the tree's running counters): nothing was actually served
             for n in plan.hit_nodes:
                 n.pinned = False
+            for name, toks in zip(("gpu", "host", "disk"),
+                                  plan.hit_tier_tokens):
+                self.tree.stats[f"hit_tokens_{name}"] -= toks
             plan.hit_nodes, plan.alpha = [], 0
             plan.beta = sum(plan.doc_tokens) + plan.question_tokens
             plan.promote_bytes = 0
+            plan.hit_tier_tokens = (0, 0, 0)
             return 0.0
 
     def commit(self, plan: RequestPlan,

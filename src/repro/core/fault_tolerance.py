@@ -43,29 +43,52 @@ def replicate_hot_nodes(tree: KnowledgeTree, budget_bytes: int) -> int:
     return done
 
 
+def _drop_cold_copies(tree: KnowledgeTree, n: Node) -> None:
+    """Free a node's host and disk copies (with accounting) — the slower
+    tiers are worthless once the node is unreachable from a cached parent."""
+    if n.in_host:
+        tree.backend.free_host(n)
+        n.in_host = False
+        n.swapped_once = False
+        tree.host_used -= n.bytes_
+    if n.in_disk:
+        tree.backend.free_disk(n)
+        n.in_disk = False
+        n.spilled_once = False
+        tree.disk_used -= n.bytes_
+
+
 def recover_from_gpu_failure(tree: KnowledgeTree) -> Tuple[int, int]:
     """Simulated device loss: every GPU-tier payload is gone.  Nodes with a
-    host replica survive (demoted to host); the rest are freed.  Returns
-    (nodes_recovered, nodes_lost).  Tier invariants hold afterwards."""
+    host or disk copy survive (demoted off the device); the rest are freed,
+    and slower-tier state stranded under a lost parent is reclaimed too —
+    match_prefix can never reach it again, so keeping it (or its mmap
+    segment files) would be a permanent leak.  Returns (nodes_recovered,
+    nodes_lost).  Tier invariants hold afterwards."""
     recovered = lost = 0
-    # bottom-up so parents are processed after children
-    nodes = sorted(tree.nodes(), key=lambda n: -len(n.path()))
+    # top-down so a node's fate can depend on its parent's outcome (a lost
+    # parent dooms the whole subtree, however many replicas it holds)
+    nodes = sorted(tree.nodes(), key=lambda n: len(n.path()))
+    dropped: List[Node] = []
     for n in nodes:
+        parent_ok = n.parent is tree.root or n.parent.cached
         if not n.in_gpu:
+            if n.cached and not parent_ok:
+                _drop_cold_copies(tree, n)   # orphaned by a lost ancestor
+                lost += 1
+                dropped.append(n)
             continue
         n.payload_gpu = None
         n.in_gpu = False
         tree.gpu_used -= n.bytes_
-        if n.in_host and (n.parent is tree.root or n.parent.cached):
+        if (n.in_host or n.in_disk) and parent_ok:
             recovered += 1
         else:
-            if n.in_host:
-                tree.backend.free_host(n)
-                n.in_host = False
-                n.swapped_once = False
-                tree.host_used -= n.bytes_
+            _drop_cold_copies(tree, n)
             lost += 1
-            tree._maybe_prune(n)
+            dropped.append(n)
+    for n in dropped:
+        tree._maybe_prune(n)
     return recovered, lost
 
 

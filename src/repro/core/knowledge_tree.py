@@ -1,16 +1,21 @@
 """The knowledge tree (paper §5.1): a prefix tree over *document ID
 sequences* whose nodes hold the intermediate states (KV tensors / SSM states)
-of one document conditioned on its path prefix, placed in a two-tier
-GPU/host hierarchy with PGDSF replacement (Algorithm 1).
+of one document conditioned on its path prefix, placed in a multi-tier
+GPU/host/disk hierarchy with PGDSF replacement (Algorithm 1) run as a
+generic clock cascade over the tier chain (docs/ARCHITECTURE.md §2).
 
-Tier invariant: if a node is in GPU, its parent is in GPU; if in host, its
-parent is in GPU or host ("parents before children in the faster tier").
-Eviction therefore only ever removes tier-leaves, and the tree hierarchy
-mirrors the memory hierarchy (paper Fig. 8).
+Tier invariant ("parents before children in the faster tier"): if a node is
+resident in tier i, its parent is resident in some tier <= i.  Eviction
+therefore only ever removes tier-leaves, and the tree hierarchy mirrors the
+memory hierarchy (paper Fig. 8).  Demotion cascades one tier at a time
+(GPU -> host -> disk -> gone); promotion pulls the other way
+(disk -> host -> GPU).  Each hop reuses the "swap-out-only-once" invariant:
+a tier never recopies bytes a live slower-tier copy already holds
+(``swapped_once`` for the host copy, ``spilled_once`` for the disk file).
 
-Payloads are opaque handles managed by a ``CacheBackend`` (real JAX arrays in
-the serving engine, byte counters in the simulator) so the identical policy
-code drives both execution modes.
+Payloads are opaque handles managed by a ``CacheBackend`` (real JAX arrays /
+mmap'd disk segments in the serving engines, byte counters in the simulator)
+so the identical policy code drives both execution modes.
 """
 from __future__ import annotations
 
@@ -19,6 +24,12 @@ import itertools
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.profiler import CostProfiler
+
+# Tier levels, fastest first.  The cascade logic is generic over this chain;
+# a zero-capacity tail tier simply never receives copies.
+GPU, HOST, DISK = 0, 1, 2
+TIER_NAMES = ("gpu", "host", "disk")
+N_TIERS = len(TIER_NAMES)
 
 
 # --------------------------------------------------------------------------
@@ -73,8 +84,13 @@ POLICIES = {p.name: p for p in (PGDSF(), GDSF(), LRU(), LFU())}
 # --------------------------------------------------------------------------
 
 class CacheBackend:
-    """Moves/free payloads between tiers; returns the seconds each move costs
-    (simulated or measured). Default: pure accounting with zero cost."""
+    """Moves/frees payloads between tiers; returns the seconds each move
+    costs (simulated or measured). Default: pure accounting with zero cost.
+
+    Subclasses override the named hop methods (``swap_out``/``load`` for
+    GPU<->host, ``spill``/``fetch`` for host<->disk); the generic cascade in
+    ``KnowledgeTree`` dispatches through ``demote_copy``/``promote_copy``/
+    ``free_tier`` so the policy code never names a tier pair."""
 
     def swap_out(self, node: "Node") -> float:   # GPU -> host copy
         node.payload_host = node.payload_gpu
@@ -84,11 +100,35 @@ class CacheBackend:
         node.payload_gpu = node.payload_host
         return 0.0
 
+    def spill(self, node: "Node") -> float:      # host -> disk write
+        node.payload_disk = node.payload_host
+        return 0.0
+
+    def fetch(self, node: "Node") -> float:      # disk -> host read
+        node.payload_host = node.payload_disk
+        return 0.0
+
     def free_gpu(self, node: "Node") -> None:
         node.payload_gpu = None
 
     def free_host(self, node: "Node") -> None:
         node.payload_host = None
+
+    def free_disk(self, node: "Node") -> None:
+        node.payload_disk = None
+
+    # ---- generic dispatch (indexed by tier level) ------------------------
+
+    def demote_copy(self, node: "Node", level: int) -> float:
+        """Copy ``node``'s payload from tier ``level`` to tier ``level+1``."""
+        return (self.swap_out, self.spill)[level](node)
+
+    def promote_copy(self, node: "Node", level: int) -> float:
+        """Copy ``node``'s payload from tier ``level`` to tier ``level-1``."""
+        return (self.load, self.fetch)[level - 1](node)
+
+    def free_tier(self, node: "Node", level: int) -> None:
+        (self.free_gpu, self.free_host, self.free_disk)[level](node)
 
 
 @dataclasses.dataclass
@@ -109,15 +149,36 @@ class Node:
 
     in_gpu: bool = False
     in_host: bool = False
-    swapped_once: bool = False
+    in_disk: bool = False
+    swapped_once: bool = False      # a live host copy exists (GPU demotes free)
+    spilled_once: bool = False      # a live disk file exists (host demotes free)
     pinned: bool = False            # in active use by a running request
 
     payload_gpu: object = None
     payload_host: object = None
+    payload_disk: object = None
 
     @property
     def cached(self) -> bool:
-        return self.in_gpu or self.in_host
+        return self.in_gpu or self.in_host or self.in_disk
+
+    def resident(self, level: int) -> bool:
+        return (self.in_gpu, self.in_host, self.in_disk)[level]
+
+    def set_resident(self, level: int, value: bool) -> None:
+        if level == GPU:
+            self.in_gpu = value
+        elif level == HOST:
+            self.in_host = value
+        else:
+            self.in_disk = value
+
+    def fastest_tier(self) -> Optional[int]:
+        """Fastest tier holding a copy (None = fully uncached)."""
+        for level in range(N_TIERS):
+            if self.resident(level):
+                return level
+        return None
 
     def path(self) -> Tuple[int, ...]:
         ids: List[int] = []
@@ -143,36 +204,106 @@ class KnowledgeTree:
         self,
         gpu_capacity: int,
         host_capacity: int,
+        disk_capacity: int = 0,
         *,
         policy: Policy | str = "pgdsf",
         profiler: Optional[CostProfiler] = None,
         backend: Optional[CacheBackend] = None,
         bytes_per_token: int = 1,
     ):
+        if disk_capacity > 0 and host_capacity <= 0:
+            raise ValueError(
+                "disk tier requires a host tier (the cascade demotes and "
+                "promotes strictly one tier at a time; host stages disk I/O)")
         self.root = Node(doc_id=None, parent=None, pinned=True)
         self.root.in_gpu = True     # shared system prompt lives in GPU
-        self.gpu_capacity = gpu_capacity
-        self.host_capacity = host_capacity
-        self.gpu_used = 0
-        self.host_used = 0
-        self.gpu_clock = 0.0
-        self.host_clock = 0.0
+        self._capacity = [int(gpu_capacity), int(host_capacity),
+                          int(disk_capacity)]
+        self._used = [0] * N_TIERS
+        self._clocks = [0.0] * N_TIERS
         self.policy = POLICIES[policy] if isinstance(policy, str) else policy
         self.profiler = profiler
         self.backend = backend or CacheBackend()
         self.bytes_per_token = bytes_per_token
         self._access_counter = itertools.count()
-        # counters for benchmarks
+        # counters for benchmarks; *_seconds are the measured/simulated
+        # transfer costs per tier hop (eviction cascades bill each hop)
         self.stats = {
-            "hits": 0, "misses": 0, "gpu_evictions": 0, "host_evictions": 0,
+            "hits": 0, "misses": 0,
+            "gpu_evictions": 0, "host_evictions": 0, "disk_evictions": 0,
             "swap_out_bytes": 0, "load_bytes": 0, "swap_out_skipped": 0,
+            "spill_bytes": 0, "fetch_bytes": 0, "spill_skipped": 0,
+            "swap_out_seconds": 0.0, "load_seconds": 0.0,
+            "spill_seconds": 0.0, "fetch_seconds": 0.0,
+            "orphaned_bytes": 0,
+            "hit_tokens_gpu": 0, "hit_tokens_host": 0, "hit_tokens_disk": 0,
         }
+
+    # ---- tier accessor back-compat (fault_tolerance writes these) --------
+
+    @property
+    def gpu_capacity(self) -> int:
+        return self._capacity[GPU]
+
+    @property
+    def host_capacity(self) -> int:
+        return self._capacity[HOST]
+
+    @property
+    def disk_capacity(self) -> int:
+        return self._capacity[DISK]
+
+    @property
+    def gpu_used(self) -> int:
+        return self._used[GPU]
+
+    @gpu_used.setter
+    def gpu_used(self, v: int) -> None:
+        self._used[GPU] = v
+
+    @property
+    def host_used(self) -> int:
+        return self._used[HOST]
+
+    @host_used.setter
+    def host_used(self, v: int) -> None:
+        self._used[HOST] = v
+
+    @property
+    def disk_used(self) -> int:
+        return self._used[DISK]
+
+    @disk_used.setter
+    def disk_used(self, v: int) -> None:
+        self._used[DISK] = v
+
+    @property
+    def gpu_clock(self) -> float:
+        return self._clocks[GPU]
+
+    @gpu_clock.setter
+    def gpu_clock(self, v: float) -> None:
+        self._clocks[GPU] = v
+
+    @property
+    def host_clock(self) -> float:
+        return self._clocks[HOST]
+
+    @host_clock.setter
+    def host_clock(self, v: float) -> None:
+        self._clocks[HOST] = v
+
+    @property
+    def disk_clock(self) -> float:
+        return self._clocks[DISK]
 
     # ---- lookup ----------------------------------------------------------
 
     def match_prefix(self, doc_ids: Sequence[int]) -> List[Node]:
         """Longest cached prefix of ``doc_ids`` (paper: O(h) traversal that
-        stops at the first non-cached child). Returns matched nodes in order."""
+        stops at the first non-cached child). Returns matched nodes in order.
+        A node counts as cached in ANY tier — a disk-resident prefix is a hit
+        that pays the fetch, not a miss that pays the recompute."""
         out: List[Node] = []
         cur = self.root
         for d in doc_ids:
@@ -200,31 +331,49 @@ class KnowledgeTree:
             node.total_cost += t / beta
             node.num_computed += 1
             node.avg_cost = node.total_cost / node.num_computed
-        clock = self.gpu_clock if node.in_gpu else self.host_clock
+        level = node.fastest_tier()
+        clock = self._clocks[level] if level is not None else self._clocks[GPU]
         node.priority = self.policy.priority(node, clock)
 
-    # ---- eviction (Alg. 1 EVICT_IN_GPU + swap-out-only-once) -------------
+    # ---- eviction: Alg. 1 EVICT_IN_GPU generalised to a clock cascade ----
 
-    def _tier_leaves(self, tier: str, pinned: Set[Node]) -> List[Node]:
-        """Nodes in `tier` with no child in the same-or-faster tier."""
-        out = []
+    def _tier_leaves(self, level: int, pinned: Set[Node]) -> List[Node]:
+        """Evictable nodes of tier ``level``: resident there, not resident in
+        any faster tier, and with no child resident at tier <= ``level`` —
+        demoting the node one tier down then keeps it at least as fast as
+        every cached child (children on slower tiers are fine: the demoted
+        parent stays cached).  If the demotion's copy fails outright, the
+        orphaned subtree is reclaimed (see ``_orphan_subtree``) — so a node
+        with a pinned cached descendant is NOT evictable: a failed copy
+        would have to orphan state a running request (or in-flight fetch)
+        still references."""
+        # one post-order pass: does any pinned cached node live below n?
+        order: List[Node] = []
         stack = [self.root]
         while stack:
             n = stack.pop()
+            order.append(n)
             stack.extend(n.children.values())
-            if n is self.root or n in pinned or n.pinned:
+        pinned_below: Dict[Node, bool] = {}
+        for n in reversed(order):       # children before parents
+            pinned_below[n] = any(
+                ((c.pinned or c in pinned) and c.cached) or pinned_below[c]
+                for c in n.children.values())
+        out = []
+        for n in order:
+            if n is self.root or n in pinned or n.pinned or pinned_below[n]:
                 continue
-            if tier == "gpu" and n.in_gpu:
-                if not any(c.in_gpu for c in n.children.values()):
-                    out.append(n)
-            elif tier == "host" and n.in_host and not n.in_gpu:
-                if not any(c.cached for c in n.children.values()):
-                    out.append(n)
+            if n.resident(level) and \
+                    not any(n.resident(j) for j in range(level)) and \
+                    not any(c.resident(j) for c in n.children.values()
+                            for j in range(level + 1)):
+                out.append(n)
         return out
 
     def evict_gpu(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
         """Free >= required bytes of GPU tier. Returns transfer seconds spent
-        on swap-outs. Raises EvictionError if impossible (all pinned)."""
+        on the demotion cascade. Raises EvictionError if impossible (all
+        pinned)."""
         return self.evict_gpu_until(
             lambda: self.gpu_used + required <= self.gpu_capacity, pinned)
 
@@ -234,59 +383,139 @@ class KnowledgeTree:
         shared by the byte-budget loop above and external resource reclaim
         (e.g. the runtime freeing paged-pool blocks). Raises EvictionError
         if ``done()`` is still false with no evictable leaf left."""
+        return self._evict_tier_until(GPU, done, pinned, strict=True)
+
+    def evict_host(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
+        """Best-effort: free host bytes by spilling to disk (or dropping).
+        Returns cascade transfer seconds; gives up silently when every host
+        leaf is pinned (the caller skips the host copy)."""
+        return self._evict_tier_until(
+            HOST, lambda: self.host_used + required <= self.host_capacity,
+            pinned, strict=False)
+
+    def evict_disk(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
+        """Best-effort: reclaim disk files of the lowest-priority disk-only
+        leaves (end of the hierarchy — the bytes are simply dropped)."""
+        return self._evict_tier_until(
+            DISK, lambda: self.disk_used + required <= self.disk_capacity,
+            pinned, strict=False)
+
+    def _evict_tier_until(self, level: int, done: Callable[[], bool],
+                          pinned: Optional[Set[Node]] = None,
+                          *, strict: bool) -> float:
+        """The shared per-tier eviction loop: pop the minimum-priority tier
+        leaf, advance the tier clock to its priority (the GDSF aging step,
+        one clock per tier), and demote it one tier down."""
         pinned = pinned or set()
         cost = 0.0
         while not done():
-            leaves = self._tier_leaves("gpu", pinned)
+            leaves = self._tier_leaves(level, pinned)
             if not leaves:
-                raise EvictionError("GPU cache thrash: all nodes pinned")
+                if strict:
+                    raise EvictionError(
+                        f"{TIER_NAMES[level]} cache thrash: all nodes pinned")
+                return cost
             victim = min(leaves, key=lambda n: n.priority)
-            self.gpu_clock = max(self.gpu_clock, victim.priority)
-            cost += self._demote(victim)
-            self.stats["gpu_evictions"] += 1
+            self._clocks[level] = max(self._clocks[level], victim.priority)
+            cost += self._demote(victim, level, pinned)
+            self.stats[f"{TIER_NAMES[level]}_evictions"] += 1
         return cost
 
-    def _demote(self, node: Node) -> float:
-        """GPU -> host (first time: copy; afterwards: free, zero copy)."""
+    def _written_below(self, node: Node, level: int) -> bool:
+        """Does a live copy already exist one tier below ``level``?"""
+        return (node.swapped_once, node.spilled_once)[level]
+
+    def _mark_written_below(self, node: Node, level: int, value: bool) -> None:
+        if level == GPU:
+            node.swapped_once = value
+        else:
+            node.spilled_once = value
+
+    def _demote(self, node: Node, level: int,
+                pinned: Optional[Set[Node]] = None) -> float:
+        """Demote ``node`` one tier down from ``level`` (first time: copy;
+        while a copy below is live: free, zero bytes moved).  The last tier
+        demotes to nowhere — the payload is dropped and the metadata pruned.
+        The caller's ``pinned`` set rides the whole cascade: a promotion's
+        room-making must never evict another node of the path being
+        promoted, at ANY tier."""
         cost = 0.0
-        if not node.swapped_once and self.host_capacity > 0:
-            cost += self.evict_host(node.bytes_)
-            if self.host_used + node.bytes_ <= self.host_capacity:
-                cost += self.backend.swap_out(node)
-                node.in_host = True
-                node.swapped_once = True
-                self.host_used += node.bytes_
-                self.stats["swap_out_bytes"] += node.bytes_
-        elif node.swapped_once:
-            self.stats["swap_out_skipped"] += 1
-        self.backend.free_gpu(node)
-        node.in_gpu = False
-        self.gpu_used -= node.bytes_
-        # re-key priority against the host clock for its new tier
-        if node.in_host:
-            node.priority = self.policy.priority(node, self.host_clock)
+        nxt = level + 1
+        if nxt < N_TIERS and self._capacity[nxt] > 0:
+            if not self._written_below(node, level):
+                # make room below first — this is the cascade: a host
+                # eviction triggered here may itself spill to disk
+                cost += self._evict_tier_until(
+                    nxt,
+                    lambda: self._used[nxt] + node.bytes_
+                    <= self._capacity[nxt],
+                    pinned, strict=False)
+                if self._used[nxt] + node.bytes_ <= self._capacity[nxt]:
+                    t = self.backend.demote_copy(node, level)
+                    cost += t
+                    node.set_resident(nxt, True)
+                    self._mark_written_below(node, level, True)
+                    self._used[nxt] += node.bytes_
+                    hop = ("swap_out", "spill")[level]
+                    self.stats[f"{hop}_bytes"] += node.bytes_
+                    self.stats[f"{hop}_seconds"] += t
+            else:
+                self.stats[("swap_out_skipped", "spill_skipped")[level]] += 1
+        self.backend.free_tier(node, level)
+        node.set_resident(level, False)
+        if level > GPU:
+            # the copy AT this level is gone: the tier above must recopy on
+            # its next demotion (swap-out/spill-once tracks live copies)
+            self._mark_written_below(node, level - 1, False)
+        self._used[level] -= node.bytes_
+        dest = node.fastest_tier()
+        if dest is not None:
+            # re-key priority against the clock of its new (slower) home tier
+            node.priority = self.policy.priority(node, self._clocks[dest])
+        else:
+            # fell fully uncached (end of hierarchy, or the copy down was
+            # skipped because the next tier is saturated with pinned work):
+            # descendants still holding copies are unreachable now —
+            # match_prefix stops at the first uncached hop — so keeping
+            # their bytes is a pure leak; reclaim the whole subtree.
+            self._orphan_subtree(node)
+            if level > GPU:
+                # GPU demotions that failed to copy keep the node's own
+                # metadata — it may be recomputed and revived with stats.
+                self._maybe_prune(node)
         return cost
 
-    def evict_host(self, required: int, pinned: Optional[Set[Node]] = None) -> float:
-        pinned = pinned or set()
-        while self.host_used + required > self.host_capacity:
-            leaves = self._tier_leaves("host", pinned)
-            if not leaves:
-                return 0.0  # can't make room; caller will skip host copy
-            victim = min(leaves, key=lambda n: n.priority)
-            self.host_clock = max(self.host_clock, victim.priority)
-            self.backend.free_host(victim)
-            victim.in_host = False
-            victim.swapped_once = False
-            self.host_used -= victim.bytes_
-            self.stats["host_evictions"] += 1
-            self._maybe_prune(victim)
-        return 0.0
+    def _orphan_subtree(self, node: Node) -> None:
+        """Free every cached copy below a node that fell fully uncached and
+        prune the dead metadata.  Cannot touch pinned state: ``_tier_leaves``
+        refuses to evict any node with a pinned cached descendant, so a
+        request path (or an in-flight fetch's temp-pinned node) never loses
+        its bytes to a failed demotion above it."""
+        doomed = []
+        stack = list(node.children.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            doomed.append(n)
+        for n in doomed:
+            for level in range(N_TIERS):
+                if n.resident(level):
+                    self.backend.free_tier(n, level)
+                    n.set_resident(level, False)
+                    self._used[level] -= n.bytes_
+                    self.stats["orphaned_bytes"] += n.bytes_
+            n.swapped_once = n.spilled_once = False
+        for n in doomed:
+            self._maybe_prune(n)
 
     def _maybe_prune(self, node: Node) -> None:
         """Drop fully-uncached leaf subtrees to bound metadata growth (keeps
-        frequency stats for cached/again-reachable nodes only)."""
+        frequency stats for cached/again-reachable nodes only).  Pinned
+        nodes are never pruned: a running request (or an in-flight insert /
+        fetch, which temp-pins its node) still references them, and marking
+        a detached object resident would leak its bytes forever."""
         while (node is not None and node is not self.root and not node.cached
+               and not node.pinned
                and not node.children and node.parent is not None):
             parent = node.parent
             parent.children.pop(node.doc_id, None)
@@ -304,7 +533,16 @@ class KnowledgeTree:
             parent.children[doc_id] = node
         cost = 0.0
         if not node.in_gpu:
-            cost += self.evict_gpu(node.bytes_, pinned)
+            # temp-pin: the room-making cascade below must not victimize or
+            # prune the very node being inserted (it can be a cold-tier
+            # resident — e.g. a disk hit whose promotion failed and degraded
+            # to recompute — and would otherwise be the lowest-priority leaf)
+            was_pinned = node.pinned
+            node.pinned = True
+            try:
+                cost += self.evict_gpu(node.bytes_, pinned)
+            finally:
+                node.pinned = was_pinned
             if self.gpu_used + node.bytes_ > self.gpu_capacity:
                 raise EvictionError("node larger than GPU cache")
             node.payload_gpu = payload
@@ -319,21 +557,69 @@ class KnowledgeTree:
                 node.payload_gpu = payload
         return node, cost
 
+    def fetch_to_host(self, node: Node, *, strict: bool = False,
+                      pinned: Optional[Set[Node]] = None) -> float:
+        """Stage a disk-resident node into the host tier (the first hop of a
+        promotion, and the overlap hook: the runtime prefetches disk reads
+        during retrieval stages so the engine-critical promote is a pure
+        host->GPU copy).  Best-effort unless ``strict``; returns seconds."""
+        if node.in_host or not node.in_disk:
+            return 0.0
+        was_pinned = node.pinned
+        node.pinned = True     # room-making must not evict the fetchee
+        try:
+            cost = self._evict_tier_until(
+                HOST,
+                lambda: self.host_used + node.bytes_ <= self.host_capacity,
+                pinned, strict=False)
+        finally:
+            node.pinned = was_pinned
+        if not node.in_disk:
+            # defense in depth: the room-making cascade should never be able
+            # to reclaim the pinned fetchee's disk copy, but promoting a
+            # freed handle would corrupt the tier state — bail instead
+            if strict:
+                raise EvictionError("disk copy vanished during fetch")
+            return cost
+        if self.host_used + node.bytes_ > self.host_capacity:
+            if strict:
+                raise EvictionError("disk fetch does not fit host tier")
+            return cost
+        t = self.backend.promote_copy(node, DISK)
+        cost += t
+        node.in_host = True
+        node.swapped_once = True        # a live host copy exists again
+        self.host_used += node.bytes_
+        self.stats["fetch_bytes"] += node.bytes_
+        self.stats["fetch_seconds"] += t
+        # re-key against the destination tier's clock, like every other tier
+        # move — a stale disk-clock priority would make the fresh fetch the
+        # first host eviction victim, undoing the prefetch immediately
+        node.priority = self.policy.priority(node, self._clocks[HOST])
+        return cost
+
     def ensure_in_gpu(self, nodes: Sequence[Node]) -> float:
-        """Promote a matched prefix path into GPU (host hits pay the PCIe
-        transfer — the paper's 'cache hit latency' component)."""
+        """Promote a matched prefix path into GPU, cascading disk->host->GPU
+        (host hits pay the PCIe transfer, disk hits additionally pay the
+        mmap read — the paper's 'cache hit latency' components)."""
         cost = 0.0
         pinned = set(nodes)
         for n in nodes:
             if n.in_gpu:
                 continue
+            if not n.in_host:
+                # disk-only: stage through host (prefetch may have done this
+                # already during retrieval, making this a no-op)
+                cost += self.fetch_to_host(n, strict=True, pinned=pinned)
             cost += self.evict_gpu(n.bytes_, pinned)
             if self.gpu_used + n.bytes_ > self.gpu_capacity:
                 raise EvictionError("promotion does not fit GPU cache")
-            cost += self.backend.load(n)
+            t = self.backend.promote_copy(n, HOST)
+            cost += t
             n.in_gpu = True
             self.gpu_used += n.bytes_
             self.stats["load_bytes"] += n.bytes_
+            self.stats["load_seconds"] += t
             n.priority = self.policy.priority(n, self.gpu_clock)
         return cost
 
@@ -348,17 +634,21 @@ class KnowledgeTree:
                 yield n
 
     def check_invariants(self) -> None:
-        gpu_b = host_b = 0
+        used = [0] * N_TIERS
         for n in self.nodes():
+            for level in range(N_TIERS):
+                if n.resident(level):
+                    used[level] += n.bytes_
             if n.in_gpu:
-                gpu_b += n.bytes_
                 p = n.parent
                 assert p is self.root or p.in_gpu, "GPU node with non-GPU parent"
-            if n.in_host:
-                host_b += n.bytes_
+            elif n.cached:
                 p = n.parent
-                assert p is self.root or p.cached, "host node with free parent"
-        assert gpu_b == self.gpu_used, (gpu_b, self.gpu_used)
-        assert host_b == self.host_used, (host_b, self.host_used)
-        assert self.gpu_used <= self.gpu_capacity
-        assert self.host_used <= self.host_capacity
+                assert p is self.root or p.cached, \
+                    f"{TIER_NAMES[n.fastest_tier()]} node with free parent"
+            assert n.swapped_once == n.in_host, "host-copy flag out of sync"
+            assert n.spilled_once == n.in_disk, "disk-copy flag out of sync"
+        for level in range(N_TIERS):
+            assert used[level] == self._used[level], \
+                (TIER_NAMES[level], used[level], self._used[level])
+            assert self._used[level] <= self._capacity[level], TIER_NAMES[level]

@@ -31,6 +31,10 @@ class HardwareProfile:
     # speedup at 11.5x rather than the raw FLOP ratio
     fixed_overhead_s: float = 30e-3
 
+    # disk tier (expansion storage below host DRAM): sequential-read
+    # bandwidth of the local NVMe the mmap'd KV segments live on
+    disk_bytes_per_s: float = 6e9
+
     def prefill_time(self, alpha: int, beta: int) -> float:
         """Time to prefill beta new tokens on top of alpha cached tokens."""
         if beta <= 0:
@@ -45,6 +49,10 @@ class HardwareProfile:
 
     def transfer_time(self, n_bytes: float) -> float:
         return n_bytes / self.pcie_bytes_per_s + 1e-4
+
+    def disk_transfer_time(self, n_bytes: float) -> float:
+        """One host<->disk hop (mmap read or write of a KV segment)."""
+        return n_bytes / self.disk_bytes_per_s + 1e-4
 
     def decode_time(self, batch: int, context: int) -> float:
         """One decode iteration for a batch (weight + KV reads, mem-bound)."""

@@ -1,7 +1,7 @@
 """Pallas TPU kernel: paged decode attention.
 
 vLLM's PagedAttention reads KV from non-contiguous pages via per-SM gathers;
-the TPU-native adaptation (DESIGN.md §3) prefetches the block table into
+the TPU-native adaptation (docs/ARCHITECTURE.md §3) prefetches the block table into
 SMEM (``PrefetchScalarGridSpec``) so the page index feeds the BlockSpec
 index_map, and the DMA engine streams one (page x hd) KV tile HBM->VMEM per
 grid step while the VPU/MXU consumes the previous one.

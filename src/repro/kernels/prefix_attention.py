@@ -4,7 +4,7 @@ This is the TPU-native replacement for RAGCache's Triton prefill-kernel
 extension of vLLM (paper §6): queries of the *new* tokens (question + fresh
 documents) attend over the concatenation [cached document KV ‖ new KV].
 
-Design (DESIGN.md §3, hardware adaptation):
+Design (docs/ARCHITECTURE.md §3, hardware adaptation):
   * grid = (batch, q_head, q_blocks, kv_blocks), kv innermost; the online-
     softmax accumulator lives in VMEM scratch and is finalized on the last
     kv step (flash-attention schedule, one output write per q block);

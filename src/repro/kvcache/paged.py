@@ -5,11 +5,19 @@ The pool owns a big (n_blocks, block_size, ...) buffer per tier; documents
 hold block-id lists.  Ref-counting lets overlapping knowledge-tree paths
 share blocks.  ``gather``/``scatter`` convert between paged storage and the
 contiguous (B, S, KV, hd) layout the model functions consume.
+
+``DiskSegmentStore`` is the third tier below the dense host copies: one
+mmap file per knowledge-tree node (docs/ARCHITECTURE.md §2).  Segments are
+written once on host->disk demotion and the file stays live until the disk
+tier evicts the node, so repeated host demotions of the same node move zero
+bytes ("spill-only-once", mirroring swap-out-only-once one tier up).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+import itertools
+import os
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -192,3 +200,102 @@ class PagedSegment:
     @property
     def n_bytes(self) -> int:
         return len(self.blocks) * self.store.block_size * self.store.bytes_per_token()
+
+
+# --------------------------------------------------------------------------
+# disk tier: one mmap file per knowledge-tree node
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DiskSegment:
+    """Handle to one node's on-disk KV: a (2, L, 1, T, KV, hd) mmap file
+    (k stacked over v).  Shape/dtype live in the handle — the file is raw."""
+    store: "DiskSegmentStore"
+    path: str
+    shape: Tuple[int, ...]          # (L, 1, T, KV, hd)
+    dtype: np.dtype
+    n_bytes: int
+
+
+class DiskSegmentStore:
+    """mmap-file-per-segment disk tier.
+
+    ``write`` creates the file and flushes it (np.memmap w+ mode), ``read``
+    maps it read-only and materialises numpy copies, ``delete`` reclaims the
+    file.  Byte accounting (``used_bytes``/``n_files``) is exact — the file
+    size is 2 * T * kv_bytes_per_token, no block padding — so tests and
+    metrics can assert reclamation."""
+
+    def __init__(self, root_dir: str, capacity_bytes: int = 0):
+        self.root = root_dir
+        self.capacity_bytes = capacity_bytes
+        self.used_bytes = 0
+        self.n_files = 0
+        self._count = itertools.count()
+        os.makedirs(root_dir, exist_ok=True)
+
+    def write(self, k: np.ndarray, v: np.ndarray) -> DiskSegment:
+        """k/v: (L, 1, T, KV, hd) host arrays -> one mmap'd file."""
+        k = np.asarray(k)
+        v = np.asarray(v)
+        path = os.path.join(self.root, f"seg{next(self._count):08d}.kv")
+        mm = np.memmap(path, dtype=k.dtype, mode="w+", shape=(2,) + k.shape)
+        mm[0] = k
+        mm[1] = v
+        mm.flush()
+        n_bytes = int(mm.nbytes)
+        del mm                          # drop the mapping, keep the file
+        self.used_bytes += n_bytes
+        self.n_files += 1
+        return DiskSegment(self, path, tuple(k.shape), k.dtype, n_bytes)
+
+    def read(self, seg: DiskSegment) -> Tuple[np.ndarray, np.ndarray]:
+        mm = np.memmap(seg.path, dtype=seg.dtype, mode="r",
+                       shape=(2,) + seg.shape)
+        k, v = np.array(mm[0]), np.array(mm[1])
+        del mm
+        return k, v
+
+    def delete(self, seg: DiskSegment) -> None:
+        os.remove(seg.path)
+        self.used_bytes -= seg.n_bytes
+        self.n_files -= 1
+
+    def clear(self) -> None:
+        """Best-effort removal of every segment file (shutdown path)."""
+        for name in os.listdir(self.root):
+            if name.endswith(".kv"):
+                try:
+                    os.remove(os.path.join(self.root, name))
+                except OSError:
+                    pass
+        self.used_bytes = 0
+        self.n_files = 0
+
+    def close(self) -> None:
+        """clear() plus removal of the (then-empty) segment directory."""
+        self.clear()
+        try:
+            os.rmdir(self.root)
+        except OSError:
+            pass
+
+
+def make_disk_store(root_dir: Optional[str],
+                    capacity_bytes: int) -> Optional[DiskSegmentStore]:
+    """Build the disk tier for a serving engine: a fresh subdirectory under
+    ``root_dir`` (or under the system temp dir when None), so two engines
+    pointed at the same directory — e.g. serve.py --check-tokens running
+    both engines — never collide on segment file names.  None = disabled."""
+    if capacity_bytes <= 0:
+        return None
+    import atexit
+    import tempfile
+    if root_dir is not None:
+        os.makedirs(root_dir, exist_ok=True)
+    path = tempfile.mkdtemp(prefix="ragcache-disk-", dir=root_dir)
+    store = DiskSegmentStore(path, capacity_bytes)
+    # the engine owns no shutdown hook; reclaim the segment files (up to the
+    # whole disk budget) and the directory when the process exits
+    atexit.register(store.close)
+    return store

@@ -11,7 +11,9 @@ tokens are identical.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --requests 12 --docs 50 --top-k 2 [--policy lru] [--no-reorder] \
-        [--sequential] [--check-tokens]
+        [--sequential] [--check-tokens] \
+        [--gpu-cache-bytes N --host-cache-bytes N \
+         --disk-cache-bytes N --disk-cache-dir DIR]
 
 Uses the reduced config (CPU-sized); the production configs are exercised
 through launch/dryrun.py.  SSM/hybrid families always use the sequential
@@ -42,6 +44,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--policy", default="pgdsf",
                     choices=["pgdsf", "gdsf", "lru", "lfu"])
+    ap.add_argument("--gpu-cache-bytes", type=int, default=64 * 2**20,
+                    help="knowledge-tree GPU tier budget (bytes)")
+    ap.add_argument("--host-cache-bytes", type=int, default=512 * 2**20,
+                    help="knowledge-tree host tier budget (bytes)")
+    ap.add_argument("--disk-cache-bytes", type=int, default=0,
+                    help="mmap'd disk tier budget below host memory "
+                         "(0 = disabled); demotion cascades GPU->host->disk "
+                         "under one PGDSF clock cascade")
+    ap.add_argument("--disk-cache-dir", default=None,
+                    help="directory for the disk tier's mmap segment files "
+                         "(default: a fresh temp dir)")
     ap.add_argument("--no-reorder", action="store_true")
     ap.add_argument("--no-spec", action="store_true")
     ap.add_argument("--max-new-tokens", type=int, default=4)
@@ -83,8 +96,19 @@ def make_setup(args):
     return cfg, params, corpus, idx, wl
 
 
+def tier_hit_line(tree) -> str:
+    s = tree.stats
+    return (f"tier hits (tokens): gpu {s['hit_tokens_gpu']} / "
+            f"host {s['hit_tokens_host']} / disk {s['hit_tokens_disk']}  "
+            f"(spilled {s['spill_bytes']} B, fetched {s['fetch_bytes']} B)")
+
+
 def serve_sequential(cfg, params, corpus, idx, wl, args):
     srv = RAGServer(cfg, params, corpus, idx, top_k=args.top_k,
+                    gpu_cache_bytes=args.gpu_cache_bytes,
+                    host_cache_bytes=args.host_cache_bytes,
+                    disk_cache_bytes=args.disk_cache_bytes,
+                    disk_cache_dir=args.disk_cache_dir,
                     policy=args.policy, reorder=not args.no_reorder,
                     speculative=not args.no_spec,
                     prefill_chunk=args.prefill_chunk)
@@ -103,6 +127,7 @@ def serve_sequential(cfg, params, corpus, idx, wl, args):
     print(f"mean TTFT {ttfts.mean() * 1e3:.1f} ms  "
           f"(search+transfer+prefill summed serially)")
     print(f"doc hit rate: {srv.controller.doc_hit_rate:.2%}")
+    print(tier_hit_line(srv.tree))
     print(f"tree stats: {srv.tree.stats}")
     return results
 
@@ -110,6 +135,10 @@ def serve_sequential(cfg, params, corpus, idx, wl, args):
 def serve_continuous(cfg, params, corpus, idx, wl, args):
     rt = ContinuousRuntime(
         cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
+        gpu_cache_bytes=args.gpu_cache_bytes,
+        host_cache_bytes=args.host_cache_bytes,
+        disk_cache_bytes=args.disk_cache_bytes,
+        disk_cache_dir=args.disk_cache_dir,
         reorder=not args.no_reorder, speculative=not args.no_spec,
         max_batch=args.max_batch, block_size=args.block_size,
         prefill_chunk=args.prefill_chunk,
@@ -128,6 +157,7 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
               f"  {r.tokens}")
     print()
     print(rt.metrics.format_report())
+    print(tier_hit_line(rt.tree))
     print(f"tree stats: {rt.tree.stats}")
     return results
 

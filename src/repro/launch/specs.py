@@ -26,7 +26,7 @@ SHAPES: Dict[str, Dict[str, Any]] = {
 
 
 def supports_long_context(cfg: ModelConfig) -> bool:
-    """long_500k runs only for sub-quadratic/bounded-KV archs (DESIGN.md §4):
+    """long_500k runs only for sub-quadratic/bounded-KV archs (docs/ARCHITECTURE.md §4):
     SSM/hybrid (O(1)/windowed state) and dense archs with sliding windows."""
     if cfg.family in ("ssm", "hybrid"):
         return True
@@ -36,7 +36,7 @@ def supports_long_context(cfg: ModelConfig) -> bool:
 def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
     if shape == "long_500k" and not supports_long_context(cfg):
         return False, ("pure full-attention arch: 500k decode skipped per "
-                       "assignment rule (DESIGN.md §4)")
+                       "assignment rule (docs/ARCHITECTURE.md §4)")
     return True, ""
 
 

@@ -546,7 +546,7 @@ def mlstm_scan(q, k, v, i_gate, f_gate, state=None):
 
 
 def mlstm_chunkwise(q, k, v, i_gate, f_gate, state=None, chunk: int = 256):
-    """Chunkwise-parallel mLSTM (TPU-native form, DESIGN.md §3).
+    """Chunkwise-parallel mLSTM (TPU-native form, docs/ARCHITECTURE.md §3).
 
     Within a chunk everything is (C x C)/(C x hd) matmuls (MXU-friendly);
     across chunks only the (hd x hd) state passes, so BPTT residuals are

@@ -324,7 +324,7 @@ def _mlstm_block(cfg: ModelConfig, p, x, state=None):
         hout, (C, n, m) = L.mlstm_scan(q, k, v, i_g, f_g, state=mstate)
     else:
         # chunkwise-parallel form: MXU matmuls intra-chunk, O(1) BPTT
-        # residuals per chunk (DESIGN.md §3)
+        # residuals per chunk (docs/ARCHITECTURE.md §3)
         hout, (C, n, m) = L.mlstm_chunkwise(q, k, v, i_g, f_g, state=mstate)
     hout = hout.reshape(B, S, Dp)
     hout = L.rms_norm(hout, p["gn"], cfg.norm_eps)

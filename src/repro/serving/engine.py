@@ -10,7 +10,7 @@ Document payloads:
     store (vLLM-style blocks) with a numpy host tier;
   * SSM family (xLSTM): the fixed-size recurrent state snapshot after the
     document — only the *deepest* hit node's state is promoted (the
-    state-caching generalization, DESIGN.md §3);
+    state-caching generalization, docs/ARCHITECTURE.md §3);
   * hybrid: both.
 """
 from __future__ import annotations
@@ -28,6 +28,7 @@ from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler
 from repro.core.reorder import ReorderQueue
 from repro.core.speculative import SpecState, SpeculativeController
+from repro.kvcache.paged import make_disk_store
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
@@ -35,8 +36,13 @@ from repro.serving.scheduler import prefill_piece_sizes
 
 
 class _JaxBackend(CacheBackend):
-    """Device tier: jnp arrays; host tier: numpy copies. Transfer timing is
-    measured (CPU-to-CPU here, but the code path is the TPU one)."""
+    """Device tier: jnp arrays; host tier: numpy copies; optional disk tier:
+    mmap'd segments (attention-family {k, v} payloads only — recurrent state
+    snapshots stay two-tier). Transfer timing is measured (CPU-to-CPU here,
+    but the code path is the TPU one)."""
+
+    def __init__(self, disk=None):
+        self.disk = disk
 
     def swap_out(self, node):
         t0 = time.perf_counter()
@@ -48,6 +54,23 @@ class _JaxBackend(CacheBackend):
         node.payload_gpu = jax.tree.map(jnp.asarray, node.payload_host)
         jax.block_until_ready(node.payload_gpu)
         return time.perf_counter() - t0
+
+    def spill(self, node):
+        t0 = time.perf_counter()
+        node.payload_disk = self.disk.write(node.payload_host["k"],
+                                            node.payload_host["v"])
+        return time.perf_counter() - t0
+
+    def fetch(self, node):
+        t0 = time.perf_counter()
+        k, v = self.disk.read(node.payload_disk)
+        node.payload_host = {"k": k, "v": v}
+        return time.perf_counter() - t0
+
+    def free_disk(self, node):
+        if node.payload_disk is not None:
+            self.disk.delete(node.payload_disk)
+        node.payload_disk = None
 
 
 @dataclasses.dataclass
@@ -73,6 +96,8 @@ class RAGServer:
         *,
         gpu_cache_bytes: int = 64 * 2**20,
         host_cache_bytes: int = 512 * 2**20,
+        disk_cache_bytes: int = 0,
+        disk_cache_dir: Optional[str] = None,
         policy: str = "pgdsf",
         top_k: int = 2,
         reorder: bool = True,
@@ -96,12 +121,17 @@ class RAGServer:
                     * jnp.dtype(cfg.jdtype).itemsize)
         if cfg.family == "ssm":
             kv_bytes = 4  # state nodes are O(1); bill ~per-token trivially
+        if cfg.family in ("ssm", "hybrid"):
+            disk_cache_bytes = 0   # recurrent snapshots are not {k, v} dicts
+        self.disk = make_disk_store(disk_cache_dir, disk_cache_bytes)
         self.tree = KnowledgeTree(
-            gpu_cache_bytes, host_cache_bytes, policy=policy,
+            gpu_cache_bytes, host_cache_bytes,
+            disk_cache_bytes if self.disk is not None else 0,
+            policy=policy,
             profiler=profiler or CostProfiler.from_fn(
                 lambda a, b: 1e-4 * b + 2e-8 * b * (a + b),
                 (0, 64, 256, 1024), (1, 32, 128, 512, 1024)),
-            backend=_JaxBackend(), bytes_per_token=max(kv_bytes, 1),
+            backend=_JaxBackend(self.disk), bytes_per_token=max(kv_bytes, 1),
         )
         self.controller = RAGController(self.tree)
         self.spec_ctl = SpeculativeController(max_prefill_bs, enabled=speculative)

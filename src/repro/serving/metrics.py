@@ -4,9 +4,11 @@ Each request gets a ``RequestTimeline`` of absolute timestamps on the
 runtime's clock (arrival, retrieval stages, prefill, first token, decode
 tokens).  ``ServingMetrics`` aggregates timelines plus per-iteration engine
 records into the paper's headline numbers — TTFT / TPOT / queueing-time
-percentiles, decode-batch occupancy, and retrieval-overlap accounting (how
+percentiles, decode-batch occupancy, retrieval-overlap accounting (how
 much of the staged vector search was hidden behind speculative prefill,
-§5.3 / Fig. 19).
+§5.3 / Fig. 19), and per-tier cache attribution: each request's cached
+prefix split by the tier (gpu/host/disk) its hit nodes were resident in at
+plan time, plus disk prefetches overlapped with search.
 """
 from __future__ import annotations
 
@@ -33,6 +35,10 @@ class RequestTimeline:
     # cache accounting
     alpha: int = 0                     # cached prefix tokens
     beta: int = 0                      # computed tokens
+    # alpha split by the tier each hit node was resident in at plan time
+    hit_tokens_gpu: int = 0
+    hit_tokens_host: int = 0
+    hit_tokens_disk: int = 0
     hit_docs: int = 0
     n_docs: int = 0
     speculative_hit: bool = False      # final docs matched a live speculation
@@ -102,6 +108,10 @@ class ServingMetrics:
         self.preemptions = 0
         self.blocks_shared = 0         # tree blocks refcounted into tables
         self.blocks_copied = 0         # unaligned doc tokens re-put privately
+        # disk tier: prefetches issued during retrieval stages (overlapped
+        # host-side I/O — see runtime._prefetch_disk)
+        self.disk_prefetches = 0
+        self.disk_prefetch_bytes = 0
         # chunked/batched prefill accounting
         # per prefill iteration: (n_chunks_packed, tokens_computed)
         self.prefill_batches: List[tuple] = []
@@ -168,6 +178,13 @@ class ServingMetrics:
             "chunk_tokens_saved": self.chunk_tokens_saved,
             "blocks_shared": self.blocks_shared,
             "blocks_copied": self.blocks_copied,
+            "tier_hit_tokens": {
+                "gpu": sum(t.hit_tokens_gpu for t in done),
+                "host": sum(t.hit_tokens_host for t in done),
+                "disk": sum(t.hit_tokens_disk for t in done),
+            },
+            "disk_prefetches": self.disk_prefetches,
+            "disk_prefetch_bytes": self.disk_prefetch_bytes,
             "doc_hit_rate": (sum(t.hit_docs for t in done)
                              / max(sum(t.n_docs for t in done), 1)),
         }
@@ -202,6 +219,11 @@ class ServingMetrics:
             f"fill {s['prefill_token_fill']:.2f}",
             f"paged blocks            : {s['blocks_shared']} shared / "
             f"{s['blocks_copied']} copied",
+            f"cache hit tokens        : gpu {s['tier_hit_tokens']['gpu']} / "
+            f"host {s['tier_hit_tokens']['host']} / "
+            f"disk {s['tier_hit_tokens']['disk']}",
+            f"disk prefetches         : {s['disk_prefetches']} "
+            f"({s['disk_prefetch_bytes']} B overlapped with search)",
             f"doc hit rate            : {s['doc_hit_rate']:.2%}",
         ]
         return "\n".join(lines)

@@ -23,7 +23,15 @@ concurrent requests, with
     every iteration does one block-table gather + one token scatter;
   * admission control and preemption by paged-block / tree-pin budget via
     the shared ``ContinuousBatchScheduler`` (the same policy object the
-    discrete-event simulator executes).
+    discrete-event simulator executes) — the pin budget counts promote
+    tokens too, so a hit path parked on host/disk cannot over-admit;
+  * an optional mmap'd DISK tier below the host copies
+    (``--disk-cache-bytes``): the knowledge tree demotes GPU -> host ->
+    disk under one PGDSF clock cascade, and disk reads for a matched
+    prefix are prefetched into host memory DURING the remaining retrieval
+    stages (host-side I/O overlaps the accelerator exactly like the staged
+    search), so the engine-critical promote stays a host->GPU copy.  See
+    docs/ARCHITECTURE.md §2.
 
 Clock semantics: the runtime keeps a virtual clock (seconds).  Engine
 iterations advance it by their *measured* wall time (real JAX compute;
@@ -58,7 +66,8 @@ from repro.core.knowledge_tree import (CacheBackend, EvictionError,
                                        KnowledgeTree)
 from repro.core.profiler import CostProfiler
 from repro.core.speculative import SpecState, SpeculativeController
-from repro.kvcache.paged import OutOfBlocks, PagedKVStore
+from repro.kvcache.paged import (DiskSegmentStore, OutOfBlocks, PagedKVStore,
+                                 make_disk_store)
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
@@ -70,12 +79,15 @@ from repro.serving.scheduler import (DECODE, PREEMPT, PREFILL,
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
 
-class _PagedBackend(CacheBackend):
+class PagedBackend(CacheBackend):
     """Tree payloads are PagedSegments in the shared device store; the host
-    tier holds dense numpy copies. Transfer seconds are measured."""
+    tier holds dense numpy copies; the optional disk tier holds one mmap
+    file per node (``DiskSegmentStore``). Transfer seconds are measured."""
 
-    def __init__(self, store: PagedKVStore):
+    def __init__(self, store: PagedKVStore,
+                 disk: Optional[DiskSegmentStore] = None):
         self.store = store
+        self.disk = disk
 
     def swap_out(self, node):
         t0 = time.perf_counter()
@@ -94,10 +106,27 @@ class _PagedBackend(CacheBackend):
         jax.block_until_ready(self.store.k)
         return time.perf_counter() - t0
 
+    def spill(self, node):
+        t0 = time.perf_counter()
+        node.payload_disk = self.disk.write(node.payload_host["k"],
+                                            node.payload_host["v"])
+        return time.perf_counter() - t0
+
+    def fetch(self, node):
+        t0 = time.perf_counter()
+        k, v = self.disk.read(node.payload_disk)
+        node.payload_host = {"k": k, "v": v}
+        return time.perf_counter() - t0
+
     def free_gpu(self, node):
         if node.payload_gpu is not None:
             self.store.free(node.payload_gpu)
         node.payload_gpu = None
+
+    def free_disk(self, node):
+        if node.payload_disk is not None:
+            self.disk.delete(node.payload_disk)
+        node.payload_disk = None
 
 
 @dataclasses.dataclass
@@ -109,6 +138,7 @@ class _PrefillResult:
     alpha: int
     beta: int
     hit_docs: int
+    hit_tier_tokens: Tuple[int, int, int]   # alpha split by (gpu, host, disk)
     speculative: bool
     started: float
 
@@ -186,6 +216,8 @@ class ContinuousRuntime:
         *,
         gpu_cache_bytes: int = 64 * 2**20,
         host_cache_bytes: int = 512 * 2**20,
+        disk_cache_bytes: int = 0,
+        disk_cache_dir: Optional[str] = None,
         policy: str = "pgdsf",
         top_k: int = 2,
         reorder: bool = True,
@@ -219,12 +251,16 @@ class ContinuousRuntime:
                                   cfg.n_kv_heads, cfg.hd,
                                   dtype=cfg.jdtype, device=True)
         self._scratch_block = self.store.pool.alloc(1)[0]  # dummy-row sink
+        self.disk = make_disk_store(disk_cache_dir, disk_cache_bytes)
         self.tree = KnowledgeTree(
-            gpu_cache_bytes, host_cache_bytes, policy=policy,
+            gpu_cache_bytes, host_cache_bytes,
+            disk_cache_bytes if self.disk is not None else 0,
+            policy=policy,
             profiler=profiler or CostProfiler.from_fn(
                 lambda a, b: 1e-4 * b + 2e-8 * b * (a + b),
                 (0, 64, 256, 1024), (1, 32, 128, 512, 1024)),
-            backend=_PagedBackend(self.store), bytes_per_token=max(kv_bytes, 1),
+            backend=PagedBackend(self.store, self.disk),
+            bytes_per_token=max(kv_bytes, 1),
         )
         self.controller = RAGController(self.tree)
         self.spec_ctl = SpeculativeController(max_prefill_bs,
@@ -265,19 +301,24 @@ class ContinuousRuntime:
     def _job_viable(self, job: _Job) -> bool:
         return not job.cancelled and job.req.state == WAITING
 
-    def _job_ctx_beta(self, job: _Job) -> Tuple[int, int]:
+    def _job_ctx_beta(self, job: _Job) -> Tuple[int, int, int]:
+        """(context, beta, promote) token counts for one job: full sequence,
+        to-be-computed tokens, and hit-prefix tokens NOT resident in GPU —
+        a pinned path on host/disk still consumes GPU pin budget when the
+        prefill promotes it (the admission check must see that)."""
         ctx = (sum(int(self.corpus.doc_lengths[d]) for d in job.docs)
                + len(job.req.r.question_tokens))
         hit = self.tree.match_prefix(job.docs)
         cached = sum(n.n_tokens for n in hit)
-        return ctx, max(ctx - cached, 1)
+        promote = sum(n.n_tokens for n in hit if not n.in_gpu)
+        return ctx, max(ctx - cached, 1), promote
 
     def _job_admissible(self, job: _Job) -> bool:
-        ctx, beta = self._job_ctx_beta(job)
-        return self.admission.admissible(ctx, beta)
+        ctx, beta, promote = self._job_ctx_beta(job)
+        return self.admission.admissible(ctx, beta, promote)
 
     def _job_lens(self, job: _Job) -> Tuple[int, int]:
-        ctx, beta = self._job_ctx_beta(job)
+        ctx, beta, _ = self._job_ctx_beta(job)
         return ctx - beta, beta
 
     # ------------------------------------------------------------------
@@ -373,6 +414,7 @@ class ContinuousRuntime:
             st.jobs.append(job)
             cached, compute = self._job_lens(job)
             self.sched.submit(job, cached, compute)
+            self._prefetch_disk(d)
             if not stage.is_final:
                 self.metrics.spec_prefills += 1
         if stage.is_final:
@@ -380,6 +422,27 @@ class ContinuousRuntime:
                 st.tl.queue_enter = self.now
             self._maybe_finalize(st)
         self._engine_kick()
+
+    def _prefetch_disk(self, docs: Tuple[int, ...]) -> None:
+        """Overlap disk reads with the remaining retrieval stages (the same
+        trick speculative prefill plays with compute, §5.3): as soon as a
+        stage's top-k is known, stage any disk-only node of the matched
+        prefix into host memory.  Disk I/O runs on host CPUs concurrently
+        with the accelerator, so — like the staged search itself — it does
+        not advance the engine clock; the later engine-critical promote
+        becomes a pure host->GPU copy."""
+        if self.disk is None:
+            return
+        hit = self.tree.match_prefix(docs)
+        pinned = set(hit)   # staging node k must not re-spill node k-1
+        for n in hit:
+            if n.in_disk and not n.in_host and not n.in_gpu:
+                before = self.tree.stats["fetch_bytes"]
+                self.tree.fetch_to_host(n, pinned=pinned)
+                moved = self.tree.stats["fetch_bytes"] - before
+                if moved:
+                    self.metrics.disk_prefetches += 1
+                    self.metrics.disk_prefetch_bytes += moved
 
     def _maybe_finalize(self, st: _ReqRun) -> None:
         """Search done: if a prefill for the final docs already completed,
@@ -607,6 +670,7 @@ class ContinuousRuntime:
                 total_len=cs.plen,
                 alpha=cs.plan.alpha, beta=cs.plan.beta,
                 hit_docs=cs.plan.hit_docs,
+                hit_tier_tokens=cs.plan.hit_tier_tokens,
                 speculative=job.speculative, started=job.started)
             payloads = [(start, length, cs.cache)
                         for start, length in cs.doc_bounds]
@@ -703,6 +767,8 @@ class ContinuousRuntime:
         tl.prefill_end = t
         tl.alpha, tl.beta = res.alpha, res.beta
         tl.hit_docs = res.hit_docs
+        (tl.hit_tokens_gpu, tl.hit_tokens_host,
+         tl.hit_tokens_disk) = res.hit_tier_tokens
         tl.n_docs = len(res.docs)
         tl.docs = res.docs
         tl.speculative_hit = res.speculative or res.started < tl.search_end

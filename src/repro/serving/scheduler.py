@@ -335,11 +335,18 @@ class PagedAdmission:
                 total += self.pool.exclusive(seg.blocks)
         return total
 
-    def admissible(self, context_tokens: int, beta_tokens: int) -> bool:
+    def admissible(self, context_tokens: int, beta_tokens: int,
+                   promote_tokens: int = 0) -> bool:
         """context_tokens: full sequence (docs + question) the request will
         hold in its block table; beta_tokens: to-be-computed tokens whose
-        document states the prefill will pin into the tree's GPU tier."""
+        document states the prefill will pin into the tree's GPU tier;
+        promote_tokens: hit-prefix tokens currently parked on host or disk —
+        a pinned path needing a disk fetch / host load lands in the same GPU
+        pin budget as newly computed state, so it must be admitted against
+        it (otherwise a cold-tier hit over-admits exactly when the cache is
+        under the most pressure)."""
         avail, headroom = self._snapshot()
         if self.blocks_needed(context_tokens) > avail:
             return False
-        return beta_tokens * self.tree.bytes_per_token <= headroom
+        return ((beta_tokens + promote_tokens) * self.tree.bytes_per_token
+                <= headroom)

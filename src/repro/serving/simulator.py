@@ -3,7 +3,7 @@
 Executes the *identical* controller / knowledge-tree / PGDSF / reorder /
 speculative-pipelining code as the real JAX engine, against an analytic
 hardware profile (A10G, H800, TPU v5e) — this is how the paper-scale TTFT /
-throughput claims are validated on a CPU-only container (DESIGN.md §7).
+throughput claims are validated on a CPU-only container (docs/ARCHITECTURE.md §7).
 
 Engine model (matches the paper's testbed semantics):
   * vector search runs on host CPUs, staged, one lane per request;
@@ -47,6 +47,7 @@ class SimConfig:
     profile: HardwareProfile
     gpu_cache_bytes: float = 8 * 2**30
     host_cache_bytes: float = 192 * 2**30
+    disk_cache_bytes: float = 0.0  # third tier below host (0 = disabled)
     max_batch: int = 4
     max_prefill_bs: int = 4
     top_k: int = 2
@@ -80,16 +81,27 @@ class SimMetrics:
     wasted_prefills: int
     gpu_evictions: int
     swap_out_bytes: int
+    disk_evictions: int = 0
+    spill_bytes: int = 0               # host->disk bytes written (once/node)
+    fetch_bytes: int = 0               # disk->host bytes read on promotion
+    hit_tokens_gpu: int = 0            # alpha tokens by residency tier at
+    hit_tokens_host: int = 0           # plan time (three-clock PGDSF)
+    hit_tokens_disk: int = 0
     chunks_cancelled: int = 0          # prefills aborted at a chunk boundary
     chunk_tokens_saved: int = 0        # prefill tokens never computed thanks
                                        # to mid-prefill cancellation
     prefill_iterations: int = 0
     avg_prefill_batch: float = 0.0     # chunks packed per prefill iteration
     ttfts: List[float] = dataclasses.field(default_factory=list, repr=False)
+    # TTFTs of requests whose final plan hit at least one disk-resident
+    # node — the tiered-cache benchmark's headline population
+    disk_hit_ttfts: List[float] = dataclasses.field(default_factory=list,
+                                                    repr=False)
 
 
 class _SimBackend(CacheBackend):
-    """Payloads are byte counts; transfers cost PCIe time."""
+    """Payloads are byte counts; GPU<->host hops cost PCIe time, host<->disk
+    hops cost NVMe sequential-bandwidth time."""
 
     def __init__(self, profile: HardwareProfile):
         self.profile = profile
@@ -101,6 +113,14 @@ class _SimBackend(CacheBackend):
     def load(self, node):
         node.payload_gpu = node.payload_host
         return self.profile.transfer_time(node.bytes_)
+
+    def spill(self, node):
+        node.payload_disk = node.payload_host
+        return self.profile.disk_transfer_time(node.bytes_)
+
+    def fetch(self, node):
+        node.payload_host = node.payload_disk
+        return self.profile.disk_transfer_time(node.bytes_)
 
 
 @dataclasses.dataclass
@@ -131,6 +151,9 @@ class _ReqState:
     ttft: float = -1.0
     remaining_out: int = 0
     context: int = 0
+    # (gpu, host, disk) hit tokens of the final plan — per-request tier
+    # attribution for the tiered-cache benchmark
+    hit_tier_tokens: Tuple[int, int, int] = (0, 0, 0)
     done: bool = False
     finish_time: float = -1.0
     token_times: List[float] = dataclasses.field(default_factory=list)
@@ -150,6 +173,7 @@ class RAGSimulator:
         prof = profiler or CostProfiler.from_profile(cfg.profile)
         self.tree = KnowledgeTree(
             int(cfg.gpu_cache_bytes), int(cfg.host_cache_bytes),
+            int(cfg.disk_cache_bytes),
             policy=cfg.policy, profiler=prof,
             backend=_SimBackend(cfg.profile),
             bytes_per_token=int(cfg.profile.kv_bytes_per_token),
@@ -371,6 +395,7 @@ class RAGSimulator:
                 st.prefill_done = self.now
                 st.prefill_docs = job.docs
                 if st.final_docs is not None and job.docs == st.final_docs:
+                    st.hit_tier_tokens = job.plan.hit_tier_tokens
                     if st.final_prefill_first_start < 0:
                         st.final_prefill_first_start = job.started
                     self._first_token(st, max(self.now, st.search_end))
@@ -462,10 +487,18 @@ class RAGSimulator:
             wasted_prefills=wasted,
             gpu_evictions=self.tree.stats["gpu_evictions"],
             swap_out_bytes=self.tree.stats["swap_out_bytes"],
+            disk_evictions=self.tree.stats["disk_evictions"],
+            spill_bytes=self.tree.stats["spill_bytes"],
+            fetch_bytes=self.tree.stats["fetch_bytes"],
+            hit_tokens_gpu=self.tree.stats["hit_tokens_gpu"],
+            hit_tokens_host=self.tree.stats["hit_tokens_host"],
+            hit_tokens_disk=self.tree.stats["hit_tokens_disk"],
             chunks_cancelled=self.chunks_cancelled,
             chunk_tokens_saved=self.chunk_tokens_saved,
             prefill_iterations=len(self.prefill_batches),
             avg_prefill_batch=(float(np.mean(self.prefill_batches))
                                if self.prefill_batches else 0.0),
             ttfts=list(map(float, ttfts)),
+            disk_hit_ttfts=[float(st.ttft) for st in self._all_states
+                            if st.ttft >= 0 and st.hit_tier_tokens[2] > 0],
         )
