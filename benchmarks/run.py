@@ -23,6 +23,7 @@ MODULES = [
     "fig18_reorder",
     "fig19_speculative",
     "fig_tiered_cache",
+    "fig_replica_routing",
     "tab4_sched_time",
     "throughput_batching",
     "tpot_topk",

@@ -9,9 +9,16 @@ paged batched decode, retrieval/prefill overlap — ``serving.runtime``);
 for A/B comparison, and ``--check-tokens`` runs BOTH and asserts the greedy
 tokens are identical.
 
+``--replicas N`` serves through N independent continuous runtimes behind a
+``ReplicaRouter`` (doc-affinity by default; ``--routing`` picks the policy
+for A/B sweeps).  Routing never changes computation — a request's greedy
+tokens are a pure function of (docs, question) — so ``--check-tokens``
+stays bit-identical to the single sequential engine at any replica count.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --requests 12 --docs 50 --top-k 2 [--policy lru] [--no-reorder] \
         [--sequential] [--check-tokens] \
+        [--replicas N --routing {affinity,round_robin,least_loaded}] \
         [--gpu-cache-bytes N --host-cache-bytes N \
          --disk-cache-bytes N --disk-cache-dir DIR]
 
@@ -32,6 +39,9 @@ from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.vectordb import IVFIndex
 from repro.serving.engine import RAGServer
+from repro.serving.metrics import FleetMetrics
+from repro.serving.router import (ROUTING_POLICIES, ReplicaRouter,
+                                  partition_requests)
 from repro.serving.runtime import ContinuousRuntime
 
 
@@ -60,6 +70,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-new-tokens", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="decode-batch slots (continuous mode)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent continuous-runtime replicas behind "
+                         "the doc-affinity router (each owns its own "
+                         "knowledge tree / paged store / scheduler)")
+    ap.add_argument("--routing", default="affinity",
+                    choices=list(ROUTING_POLICIES),
+                    help="replica routing policy (A/B-able; routing never "
+                         "changes computation, so --check-tokens holds at "
+                         "any replica count)")
+    ap.add_argument("--max-queue-skew", type=int, default=4,
+                    help="affinity escape hatch: max allowed max-min "
+                         "per-replica queue-depth skew before a request "
+                         "escapes to the least-loaded replica")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="tokens per prefill chunk (0 = unchunked); applies "
                          "to BOTH engines so --check-tokens compares "
@@ -133,7 +156,8 @@ def serve_sequential(cfg, params, corpus, idx, wl, args):
 
 
 def serve_continuous(cfg, params, corpus, idx, wl, args):
-    rt = ContinuousRuntime(
+    n = max(1, args.replicas)
+    rts = [ContinuousRuntime(
         cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
         gpu_cache_bytes=args.gpu_cache_bytes,
         host_cache_bytes=args.host_cache_bytes,
@@ -143,11 +167,30 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
         max_batch=args.max_batch, block_size=args.block_size,
         prefill_chunk=args.prefill_chunk,
         max_prefill_tokens=args.max_prefill_tokens,
-        search_time_scale=args.search_scale)
+        search_time_scale=args.search_scale) for _ in range(n)]
+    router = ReplicaRouter(rts, policy=args.routing,
+                           max_queue_skew=args.max_queue_skew)
+    # partition the trace in arrival order by the request's retrieved docs
+    # (deterministic, equal to the runtime's final staged-search result);
+    # the in-flight window models per-replica backlog draining while the
+    # trace arrives (each replica decodes max_batch requests concurrently)
+    shares = partition_requests(
+        router, wl,
+        docs_of=lambda r: idx.search(r.query_vec, args.top_k),
+        doc_tokens_of=lambda docs: [int(corpus.doc_lengths[d])
+                                    for d in docs],
+        context_of=lambda r, docs, toks: sum(toks) + len(r.question_tokens),
+        window=2 * args.max_batch * n)
     t0 = time.time()
-    results = rt.serve(wl, max_new_tokens=args.max_new_tokens)
+    results = []
+    for rt, share in zip(rts, shares):
+        if share:
+            results.extend(rt.serve(share,
+                                    max_new_tokens=args.max_new_tokens))
     wall = time.time() - t0
-    print(f"\n[continuous] served {len(results)} requests in {wall:.1f}s "
+    results.sort(key=lambda r: r.req_id)
+    label = "continuous" if n == 1 else f"continuous x{n} ({args.routing})"
+    print(f"\n[{label}] served {len(results)} requests in {wall:.1f}s "
           f"wall (incl. jit compiles)")
     print(f"{'req':>4} {'docs':>12} {'alpha':>6} {'beta':>5} "
           f"{'ttft_ms':>8} {'spec':>5}  tokens")
@@ -156,9 +199,17 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
               f"{r.ttft * 1000:>8.1f} {'hit' if r.speculative_hit else '':>5}"
               f"  {r.tokens}")
     print()
-    print(rt.metrics.format_report())
-    print(tier_hit_line(rt.tree))
-    print(f"tree stats: {rt.tree.stats}")
+    if n == 1:
+        print(rts[0].metrics.format_report())
+        print(tier_hit_line(rts[0].tree))
+        print(f"tree stats: {rts[0].tree.stats}")
+    else:
+        fleet = FleetMetrics(router.stats())
+        for i, rt in enumerate(rts):
+            fleet.add_replica(f"replica{i}", rt.metrics)
+        print(fleet.format_report())
+        for i, rt in enumerate(rts):
+            print(f"replica{i} {tier_hit_line(rt.tree)}")
     return results
 
 
@@ -171,6 +222,9 @@ def main() -> None:
     recurrent = cfg.family in ("ssm", "hybrid")
     if recurrent and not args.sequential:
         print("note: recurrent-state family -> sequential engine")
+    if args.replicas > 1 and (recurrent or args.sequential):
+        print("note: --replicas applies to the continuous engine only; "
+              "the sequential A/B side stays a single engine")
     if recurrent and args.check_tokens:
         print("note: --check-tokens unavailable for recurrent families "
               "(no continuous engine to compare against); NOT checked")

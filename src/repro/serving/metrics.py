@@ -9,11 +9,18 @@ much of the staged vector search was hidden behind speculative prefill,
 §5.3 / Fig. 19), and per-tier cache attribution: each request's cached
 prefix split by the tier (gpu/host/disk) its hit nodes were resident in at
 plan time, plus disk prefetches overlapped with search.
+
+``FleetMetrics`` layers the multi-replica view on top (docs/ARCHITECTURE.md
+§8): one ``ServingMetrics`` per replica plus the ``ReplicaRouter``'s
+routing accounting, aggregated into per-replica occupancy / hit-token
+tiers / routed-vs-escaped counts and cross-replica TTFT percentiles
+computed over the POOLED per-request timelines (exact, not a mean of
+per-replica percentiles).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -226,4 +233,80 @@ class ServingMetrics:
             f"({s['disk_prefetch_bytes']} B overlapped with search)",
             f"doc hit rate            : {s['doc_hit_rate']:.2%}",
         ]
+        return "\n".join(lines)
+
+
+class FleetMetrics:
+    """Cross-replica aggregation for the multi-replica serving driver.
+
+    The driver adds each replica's ``ServingMetrics`` after serving and
+    attaches the router's ``stats()`` dict; ``summary()`` pools every
+    replica's completed timelines so the cross-replica TTFT/TPOT
+    percentiles are exact."""
+
+    def __init__(self, router_stats: Dict[str, object] | None = None):
+        self.replicas: List[Tuple[str, ServingMetrics]] = []
+        self.router_stats: Dict[str, object] = router_stats or {}
+
+    def add_replica(self, name: str, metrics: ServingMetrics) -> None:
+        self.replicas.append((name, metrics))
+
+    def summary(self) -> Dict[str, object]:
+        done = [t for _, m in self.replicas for t in m.completed()]
+        per_replica = []
+        for name, m in self.replicas:
+            s = m.summary()
+            per_replica.append({
+                "name": name,
+                "completed": s["completed"],
+                "decode_occupancy": s["mean_decode_batch"],
+                "prefill_occupancy": s["prefill_batch_occupancy"],
+                "tier_hit_tokens": s["tier_hit_tokens"],
+                "blocks_shared": s["blocks_shared"],
+                "preemptions": s["preemptions"],
+            })
+        tiers = {t: sum(r["tier_hit_tokens"][t] for r in per_replica)
+                 for t in ("gpu", "host", "disk")}
+        return {
+            "replicas": len(self.replicas),
+            "completed": len(done),
+            "ttft": percentiles([t.ttft for t in done]),
+            "tpot": percentiles([t.tpot for t in done if t.token_times]),
+            "tier_hit_tokens": tiers,
+            "per_replica": per_replica,
+            "routing": dict(self.router_stats),
+        }
+
+    def format_report(self) -> str:
+        s = self.summary()
+        p = s["ttft"]
+        rs = s["routing"]
+        kinds = rs.get("kind_counts", {})
+        routed = rs.get("routed", [])
+        escaped = rs.get("escaped", 0)
+        lines = [
+            f"fleet: {s['replicas']} replicas, {s['completed']} completed, "
+            f"policy {rs.get('policy', '?')}",
+            f"cross-replica TTFT (ms) : mean {p['mean'] * 1e3:7.1f}  "
+            f"p50 {p['p50'] * 1e3:7.1f}  p99 {p['p99'] * 1e3:7.1f}",
+            f"routed per replica      : {routed}  "
+            f"(escaped {escaped}, max skew {rs.get('max_skew_observed', 0)}"
+            f"/{rs.get('max_queue_skew', '?')} bound)",
+            f"decision kinds          : "
+            + (", ".join(f"{k} {v}" for k, v in sorted(kinds.items()))
+               or "none"),
+            f"fleet hit tokens        : gpu {s['tier_hit_tokens']['gpu']} / "
+            f"host {s['tier_hit_tokens']['host']} / "
+            f"disk {s['tier_hit_tokens']['disk']}",
+        ]
+        for r in s["per_replica"]:
+            lines.append(
+                f"  {r['name']:<12} completed {r['completed']:>4}  "
+                f"decode occ {r['decode_occupancy']:.2f}  "
+                f"prefill occ {r['prefill_occupancy']:.2f}  "
+                f"hit gpu/host/disk {r['tier_hit_tokens']['gpu']}/"
+                f"{r['tier_hit_tokens']['host']}/"
+                f"{r['tier_hit_tokens']['disk']}  "
+                f"shared {r['blocks_shared']}  "
+                f"preempt {r['preemptions']}")
         return "\n".join(lines)

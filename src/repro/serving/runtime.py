@@ -18,9 +18,11 @@ concurrent requests, with
     speculation is cancelled *between* chunks (the partial KV is freed and
     the remaining chunk tokens are never computed);
   * batched decode through the ``PagedKVStore``: each running request owns a
-    block table; knowledge-tree document segments are REFCOUNT-SHARED into
-    the table when block-aligned (copied into private blocks otherwise), and
-    every iteration does one block-table gather + one token scatter;
+    token-level slot mapping (position -> (block, slot)); EVERY cached
+    knowledge-tree document segment of the hit prefix is REFCOUNT-SHARED
+    into it — block-aligned or not, since the mapping absorbs unaligned
+    tails — and every iteration does one slot-map gather + one token
+    scatter;
   * admission control and preemption by paged-block / tree-pin budget via
     the shared ``ContinuousBatchScheduler`` (the same policy object the
     discrete-event simulator executes) — the pin budget counts promote
@@ -186,8 +188,10 @@ class _ReqRun:
         default_factory=dict)
     start_by_docs: Dict[Tuple[int, ...], float] = dataclasses.field(
         default_factory=dict)
-    # decode state
-    table: List[int] = dataclasses.field(default_factory=list)
+    # decode state: token-level slot mapping — position p of the request's
+    # sequence lives at (pos_blk[p], pos_slot[p]) in the paged store
+    pos_blk: List[int] = dataclasses.field(default_factory=list)
+    pos_slot: List[int] = dataclasses.field(default_factory=list)
     owned_blocks: List[int] = dataclasses.field(default_factory=list)
     length: int = 0
     last_tok: int = 0
@@ -804,21 +808,27 @@ class ContinuousRuntime:
         self.sched.submit(job, cached, compute)
 
     def _paginate(self, st: _ReqRun, res: _PrefillResult) -> bool:
-        """Build the request's decode block table: refcount-share the
-        block-aligned knowledge-tree prefix, copy the rest (unaligned doc
-        tail + question) into private blocks with decode reserve."""
+        """Build the request's decode slot mapping: refcount-share EVERY
+        complete GPU-resident knowledge-tree prefix node — block-aligned or
+        not; the token-level (block, slot) mapping absorbs unaligned doc
+        tails, so a 20-token doc in 16-token blocks shares both its blocks
+        and the next doc's tokens simply start in a fresh block — and copy
+        the rest (uncached docs + question) into private blocks with decode
+        reserve."""
         bs = self.store.block_size
-        table: List[int] = []
+        pos_blk: List[int] = []
+        pos_slot: List[int] = []
         shared: List[int] = []
         offset = 0
         for node in self.tree.match_prefix(res.docs):
             seg = node.payload_gpu
             if (seg is None or not node.in_gpu
-                    or seg.n_tokens != node.n_tokens
-                    or seg.n_tokens % bs != 0):
+                    or seg.n_tokens != node.n_tokens):
                 break
             self.store.share(seg)
-            table.extend(seg.blocks)
+            for i in range(seg.n_tokens):
+                pos_blk.append(seg.blocks[i // bs])
+                pos_slot.append(i % bs)
             shared.extend(seg.blocks)
             offset += seg.n_tokens
         rest = res.total_len - offset
@@ -833,8 +843,10 @@ class ContinuousRuntime:
         except OutOfBlocks:
             self.store.release(shared)
             return False
-        table.extend(priv.blocks)
-        st.table = table
+        for i in range(rest + st.remaining):
+            pos_blk.append(priv.blocks[i // bs])
+            pos_slot.append(i % bs)
+        st.pos_blk, st.pos_slot = pos_blk, pos_slot
         st.owned_blocks = shared + priv.blocks
         st.length = res.total_len
         self.metrics.blocks_shared += len(shared)
@@ -844,7 +856,7 @@ class ContinuousRuntime:
     def _release_table(self, st: _ReqRun) -> None:
         if st.owned_blocks:
             self.store.release(st.owned_blocks)
-        st.table, st.owned_blocks = [], []
+        st.pos_blk, st.pos_slot, st.owned_blocks = [], [], []
         st.length = 0
 
     # ---- batched decode ------------------------------------------------
@@ -852,52 +864,58 @@ class ContinuousRuntime:
     def _build_decode_fn(self) -> None:
         cfg = self.cfg
         B = self.sched.config.max_batch
-        ns = self._n_slots
-        bs = self.store.block_size
+        S = self._n_slots * self.store.block_size   # max token positions
 
-        def step(params, toks, tables, lengths, k_pages, v_pages):
-            k, v = k_pages[:, tables], v_pages[:, tables]
-            L = k.shape[0]
-            k = k.reshape(L, B, ns * bs, *k.shape[4:])
-            v = v.reshape(L, B, ns * bs, *v.shape[4:])
+        def step(params, toks, blk_map, slot_map, lengths, k_pages, v_pages):
+            # token-level slot mapping (vLLM-style slot_mapping): position p
+            # of request b lives at (blk_map[b, p], slot_map[b, p]), so the
+            # gathered dense sequence is hole-free even when shared tree
+            # segments end mid-block — sharing needs no block alignment
+            k = k_pages[:, blk_map, slot_map]       # (L, B, S, KV, hd)
+            v = v_pages[:, blk_map, slot_map]
             logits, new = M.decode_step(cfg, params, toks,
                                         {"k": k, "v": v}, lengths + 1)
             bidx = jnp.arange(B)
             newk = new["k"][:, bidx, lengths]          # (L, B, KV, hd)
             newv = new["v"][:, bidx, lengths]
-            blk = tables[bidx, lengths // bs]
-            slot = lengths % bs
+            blk = blk_map[bidx, lengths]
+            slot = slot_map[bidx, lengths]
             k_pages = k_pages.at[:, blk, slot].set(newk.astype(k_pages.dtype))
             v_pages = v_pages.at[:, blk, slot].set(newv.astype(v_pages.dtype))
             return jnp.argmax(logits[:, -1], axis=-1), k_pages, v_pages
 
-        self._decode_fn = jax.jit(step, donate_argnums=(4, 5))
+        self._decode_fn = jax.jit(step, donate_argnums=(5, 6))
         # warm up the single decode shape so its compile never lands on the
         # serving clock (all dummy rows write into the scratch block)
         toks = jnp.zeros((B, 1), jnp.int32)
-        tables = jnp.full((B, ns), self._scratch_block, jnp.int32)
+        blk_map = jnp.full((B, S), self._scratch_block, jnp.int32)
+        slot_map = jnp.zeros((B, S), jnp.int32)
         lengths = jnp.zeros((B,), jnp.int32)
         _, self.store.k, self.store.v = self._decode_fn(
-            self.params, toks, tables, lengths, self.store.k, self.store.v)
+            self.params, toks, blk_map, slot_map, lengths,
+            self.store.k, self.store.v)
         jax.block_until_ready(self.store.k)
 
     def _start_decode(self) -> None:
         batch = self.running[:self.sched.config.max_batch]
         B = self.sched.config.max_batch
-        ns = self._n_slots
+        S = self._n_slots * self.store.block_size
         toks = np.zeros((B, 1), np.int32)
-        tables = np.full((B, ns), self._scratch_block, np.int32)
+        blk_map = np.full((B, S), self._scratch_block, np.int32)
+        slot_map = np.zeros((B, S), np.int32)
         lengths = np.zeros((B,), np.int32)
         for i, st in enumerate(batch):
             toks[i, 0] = st.last_tok
-            tables[i, :len(st.table)] = st.table
+            blk_map[i, :len(st.pos_blk)] = st.pos_blk
+            slot_map[i, :len(st.pos_slot)] = st.pos_slot
             lengths[i] = st.length
         self.engine_busy = True
         self.metrics.record_iteration("decode", len(batch))
         t0 = time.perf_counter()
         next_toks, self.store.k, self.store.v = self._decode_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(tables),
-            jnp.asarray(lengths), self.store.k, self.store.v)
+            self.params, jnp.asarray(toks), jnp.asarray(blk_map),
+            jnp.asarray(slot_map), jnp.asarray(lengths),
+            self.store.k, self.store.v)
         next_toks = np.asarray(jax.block_until_ready(next_toks))
         dt = time.perf_counter() - t0
         self._push(self.now + dt, "decode_done",

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,6 +38,7 @@ from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler, HardwareProfile
 from repro.core.speculative import SpecState, SpeculativeController
 from repro.retrieval.corpus import Corpus, Request
+from repro.serving.router import AFFINITY, ReplicaRouter, partition_requests
 from repro.serving.scheduler import (DECODE, PREFILL,
                                      ContinuousBatchScheduler,
                                      SchedulerConfig, prefill_piece_sizes)
@@ -65,6 +67,15 @@ class SimConfig:
                                    # speculation cancels between iterations)
     max_prefill_tokens: int = 0    # ragged prefill-batch token budget per
                                    # iteration (0 = one request per iteration)
+    seed: int = 0                  # seeds the simulator's own RNG (a
+                                   # ``random.Random`` instance — NO
+                                   # module-level global state), so two runs
+                                   # with the same config+workload produce
+                                   # identical SimMetrics by construction
+    latency_jitter: float = 0.0    # +/- fractional noise on engine
+                                   # iteration times drawn from the seeded
+                                   # RNG (real accelerators are not
+                                   # constant-latency; 0 = analytic times)
 
 
 @dataclasses.dataclass
@@ -170,6 +181,11 @@ class RAGSimulator:
         self.corpus = corpus
         self.index = index
         self.requests = list(requests)
+        # instance-owned seeded RNG: every stochastic choice (currently the
+        # optional latency jitter) draws from here, never from the
+        # process-global ``random``/``np.random`` state — same-seed
+        # determinism is a tested property (tests/test_simulator.py)
+        self.rng = random.Random(cfg.seed)
         prof = profiler or CostProfiler.from_profile(cfg.profile)
         self.tree = KnowledgeTree(
             int(cfg.gpu_cache_bytes), int(cfg.host_cache_bytes),
@@ -208,6 +224,13 @@ class RAGSimulator:
 
     def _push(self, t: float, kind: str, payload) -> None:
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def _jitter(self) -> float:
+        """Multiplicative iteration-time noise from the seeded RNG."""
+        j = self.cfg.latency_jitter
+        if j <= 0.0:
+            return 1.0
+        return 1.0 + j * (2.0 * self.rng.random() - 1.0)
 
     # ---- main loop --------------------------------------------------------
 
@@ -335,6 +358,7 @@ class RAGSimulator:
         self.engine_busy = True
         if ran:                         # all-stale batches executed nothing
             self.prefill_batches.append(len(ran))
+            dt *= self._jitter()
         self._push(self.now + dt, "prefill_batch_done", ran)
 
     def _begin_chunked(self, job: _Job) -> float:
@@ -427,7 +451,7 @@ class RAGSimulator:
     def _start_decode(self) -> None:
         batch = list(self.decode_running)
         ctx = float(np.mean([s.context for s in batch]))
-        dt = self.cfg.profile.decode_time(len(batch), ctx)
+        dt = self.cfg.profile.decode_time(len(batch), ctx) * self._jitter()
         self.engine_busy = True
         self._push(self.now + dt, "decode_done", batch)
 
@@ -502,3 +526,101 @@ class RAGSimulator:
             disk_hit_ttfts=[float(st.ttft) for st in self._all_states
                             if st.ttft >= 0 and st.hit_tier_tokens[2] > 0],
         )
+
+
+# --------------------------------------------------------------------------
+# multi-replica simulation: the same ReplicaRouter the real driver uses
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetSimResult:
+    """Outcome of a multi-replica simulation: the cross-replica merge, the
+    per-replica metrics, and the router's routing/skew accounting."""
+    metrics: SimMetrics
+    per_replica: List[SimMetrics]
+    router_stats: Dict[str, object]
+
+
+def _wmean(pairs: List[Tuple[float, float]]) -> float:
+    """Weighted mean over (value, weight), 0.0 when all weights are zero."""
+    tot = sum(w for _, w in pairs)
+    return sum(v * w for v, w in pairs) / tot if tot > 0 else 0.0
+
+
+def merge_sim_metrics(parts: Sequence[SimMetrics]) -> SimMetrics:
+    """Cross-replica SimMetrics: percentiles recomputed over the pooled
+    per-request TTFTs (exact), ratio metrics completion-weighted, counters
+    summed, duration = the slowest replica (replicas run concurrently)."""
+    ttfts = [t for m in parts for t in m.ttfts]
+    ttfts_a = np.asarray(ttfts) if ttfts else np.asarray([0.0])
+    completed = sum(m.completed for m in parts)
+    duration = max((m.duration for m in parts), default=0.0)
+    return SimMetrics(
+        avg_ttft=float(ttfts_a.mean()),
+        p50_ttft=float(np.percentile(ttfts_a, 50)),
+        p99_ttft=float(np.percentile(ttfts_a, 99)),
+        avg_tpot=_wmean([(m.avg_tpot, m.completed) for m in parts]),
+        doc_hit_rate=_wmean([(m.doc_hit_rate, m.completed) for m in parts]),
+        completed=completed,
+        duration=float(duration),
+        throughput_rps=completed / duration if duration > 0 else 0.0,
+        avg_non_overlap_search=_wmean(
+            [(m.avg_non_overlap_search, m.completed) for m in parts]),
+        wasted_prefills=sum(m.wasted_prefills for m in parts),
+        gpu_evictions=sum(m.gpu_evictions for m in parts),
+        swap_out_bytes=sum(m.swap_out_bytes for m in parts),
+        disk_evictions=sum(m.disk_evictions for m in parts),
+        spill_bytes=sum(m.spill_bytes for m in parts),
+        fetch_bytes=sum(m.fetch_bytes for m in parts),
+        hit_tokens_gpu=sum(m.hit_tokens_gpu for m in parts),
+        hit_tokens_host=sum(m.hit_tokens_host for m in parts),
+        hit_tokens_disk=sum(m.hit_tokens_disk for m in parts),
+        chunks_cancelled=sum(m.chunks_cancelled for m in parts),
+        chunk_tokens_saved=sum(m.chunk_tokens_saved for m in parts),
+        prefill_iterations=sum(m.prefill_iterations for m in parts),
+        avg_prefill_batch=_wmean(
+            [(m.avg_prefill_batch, m.prefill_iterations) for m in parts]),
+        ttfts=list(map(float, ttfts)),
+        disk_hit_ttfts=[t for m in parts for t in m.disk_hit_ttfts],
+    )
+
+
+def simulate_replicas(cfg: SimConfig, corpus: Corpus, index,
+                      requests: Sequence[Request], *,
+                      n_replicas: int = 1, routing: str = AFFINITY,
+                      max_queue_skew: int = 4,
+                      profiler: Optional[CostProfiler] = None
+                      ) -> FleetSimResult:
+    """Simulate N independent engine replicas behind a ``ReplicaRouter``.
+
+    Each replica is a full ``RAGSimulator`` — its own ``KnowledgeTree``,
+    scheduler and three-tier cache; no state is shared across replicas.
+    The router object is the SAME class ``launch/serve.py`` drives over
+    real ``ContinuousRuntime`` replicas (mirroring how the scheduler is
+    shared), so simulated and real routing policy cannot drift: the trace
+    is partitioned through ``partition_requests`` in arrival order, keyed
+    by each request's (deterministic) retrieved doc IDs.
+    """
+    sims = [RAGSimulator(cfg, corpus, index, [], profiler=profiler)
+            for _ in range(n_replicas)]
+    router = ReplicaRouter(sims, policy=routing,
+                           max_queue_skew=max_queue_skew)
+    ordered = sorted(requests, key=lambda r: r.arrival)
+    # in-flight window: each replica drains max_batch requests concurrently
+    # while the trace keeps arriving, so backlog — what the escape hatch
+    # bounds — is a sliding window over the most recent dispatches
+    shares = partition_requests(
+        router, ordered,
+        docs_of=lambda r: index.search(r.query_vec, cfg.top_k),
+        doc_tokens_of=lambda docs: [int(corpus.doc_lengths[d])
+                                    for d in docs],
+        context_of=lambda r, docs, toks: (sum(toks)
+                                          + len(r.question_tokens)
+                                          + cfg.system_prompt_tokens),
+        window=2 * cfg.max_batch * n_replicas)
+    per = []
+    for sim, share in zip(sims, shares):
+        sim.requests = list(share)
+        per.append(sim.run())
+    return FleetSimResult(metrics=merge_sim_metrics(per), per_replica=per,
+                          router_stats=router.stats())

@@ -1,11 +1,8 @@
-"""Paged KV block pool: unit + hypothesis property tests."""
-import pytest
-
-pytest.importorskip("hypothesis")
-
-import hypothesis.strategies as st
+"""Paged KV block pool: unit + hypothesis property tests.  Only the
+property test needs hypothesis — the unit and regression tests must run
+without the optional dev deps."""
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.kvcache.paged import BlockPool, OutOfBlocks, PagedKVStore
 
@@ -50,24 +47,67 @@ def test_paged_store_roundtrip():
     assert store.pool.free_blocks == 8
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.one_of(
-    st.tuples(st.just("alloc"), st.integers(1, 4)),
-    st.tuples(st.just("free"), st.integers(0, 10)),
-), min_size=1, max_size=40))
-def test_pool_never_double_allocates(ops):
-    """Property: live segments never share blocks; accounting always exact."""
-    p = BlockPool(16, 4)
-    live = []
-    for op, arg in ops:
-        if op == "alloc":
-            try:
-                live.append(p.alloc(arg))
-            except OutOfBlocks:
-                pass
-        elif live:
-            seg = live.pop(arg % len(live))
-            p.decref(seg)
-        all_live = [b for seg in live for b in seg]
-        assert len(all_live) == len(set(all_live))
-        p.check()
+def test_unaligned_doc_is_shared_not_copied():
+    """Regression (block-aligned tree insertion, ROADMAP): a cached doc
+    whose token count is NOT a block multiple must still be refcount-shared
+    into a request's decode slot mapping — the token-level (block, slot)
+    mapping absorbs the unaligned tail, so only the question/new tokens are
+    copied into private blocks."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.retrieval.corpus import make_corpus, make_workload
+    from repro.retrieval.vectordb import IVFIndex
+    from repro.serving.runtime import ContinuousRuntime
+
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_corpus(6, mean_doc_tokens=20, vocab=cfg.vocab_size, seed=3)
+    bs = 16
+    for i in range(len(corpus.doc_lengths)):
+        # force every doc to 20 tokens: NOT a multiple of the 16-token block
+        corpus.doc_lengths[i] = 20
+        corpus.doc_tokens[i] = np.resize(corpus.doc_tokens[i], 20)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=3, nprobe=3)
+    wl = make_workload(corpus, n_requests=4, rate=100.0, question_tokens=8,
+                       vocab=cfg.vocab_size, zipf_s=1.5, seed=2)
+    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=1, block_size=bs)
+    res = rt.serve(wl, max_new_tokens=2)
+    assert len(res) == len(wl)
+    # at least one request hit the tree and shared the unaligned doc
+    assert any(r.alpha > 0 for r in res)
+    assert rt.metrics.blocks_shared > 0, \
+        "unaligned cached doc was copied instead of refcount-shared"
+    rt.store.pool.check()
+    rt.tree.check_invariants()
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 4)),
+        st.tuples(st.just("free"), st.integers(0, 10)),
+    ), min_size=1, max_size=40))
+    def test_pool_never_double_allocates(ops):
+        """Property: live segments never share blocks; accounting exact."""
+        p = BlockPool(16, 4)
+        live = []
+        for op, arg in ops:
+            if op == "alloc":
+                try:
+                    live.append(p.alloc(arg))
+                except OutOfBlocks:
+                    pass
+            elif live:
+                seg = live.pop(arg % len(live))
+                p.decref(seg)
+            all_live = [b for seg in live for b in seg]
+            assert len(all_live) == len(set(all_live))
+            p.check()

@@ -1,0 +1,125 @@
+"""ReorderQueue property tests: the ``bump_skipped`` / ``prune`` /
+``remove`` bookkeeping paths had no direct coverage.  Properties checked
+over arbitrary submit/pop/prune/bump interleavings:
+
+  * the queue's pending set is exactly {pushed} - {popped} - {pruned};
+  * a pruned item is never resurrected by any later operation;
+  * pops never duplicate and never return pruned items;
+  * ``max_skipped`` never exceeds the number of passing rounds, and the
+    starvation window guarantees any entry is popped within ``window``
+    pops of joining.
+"""
+import pytest
+
+from repro.core.reorder import ReorderQueue
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st         # noqa: E402
+from hypothesis import given, settings     # noqa: E402
+
+# operation alphabet: push(cached, compute), pop, prune one live item (by
+# rotating index), prune a predicate class, bump_skipped, refresh
+ops_strategy = st.lists(st.one_of(
+    st.tuples(st.just("push"), st.integers(0, 50), st.integers(1, 50)),
+    st.tuples(st.just("pop"), st.just(0), st.just(0)),
+    st.tuples(st.just("prune_one"), st.integers(0, 10), st.just(0)),
+    st.tuples(st.just("prune_even"), st.just(0), st.just(0)),
+    st.tuples(st.just("bump"), st.just(0), st.just(0)),
+), min_size=1, max_size=60)
+
+
+@settings(max_examples=150, deadline=None)
+@given(ops=ops_strategy, window=st.integers(1, 8),
+       enabled=st.booleans())
+def test_interleavings_preserve_pending_set(ops, window, enabled):
+    q = ReorderQueue(window=window, enabled=enabled)
+    next_id = 0
+    pending = set()                # what the queue must currently hold
+    popped = []
+    pruned = set()
+    for op, a, b in ops:
+        if op == "push":
+            q.push(next_id, a, b)
+            pending.add(next_id)
+            next_id += 1
+        elif op == "pop":
+            item = q.pop()
+            if pending:
+                assert item in pending, "pop returned a non-pending item"
+                pending.remove(item)
+                popped.append(item)
+            else:
+                assert item is None
+        elif op == "prune_one" and pending:
+            victim = sorted(pending)[a % len(pending)]
+            removed = q.prune(lambda it: it == victim)
+            assert removed == 1
+            pending.remove(victim)
+            pruned.add(victim)
+        elif op == "prune_even":
+            evens = {it for it in pending if it % 2 == 0}
+            removed = q.prune(lambda it: it % 2 == 0)
+            assert removed == len(evens)
+            pending -= evens
+            pruned |= evens
+        elif op == "bump":
+            q.bump_skipped()
+        # invariants after EVERY operation
+        assert set(q.peek_all()) == pending
+        assert len(q) == len(pending)
+        assert not (set(q.peek_all()) & pruned), \
+            "a pruned request was resurrected"
+    # drain: everything still pending comes out exactly once, nothing else
+    drained = []
+    while True:
+        item = q.pop()
+        if item is None:
+            break
+        drained.append(item)
+    assert sorted(drained) == sorted(pending)
+    assert not (set(drained) & pruned)
+    assert len(set(popped + drained)) == len(popped) + len(drained), \
+        "an item was popped twice"
+
+
+@settings(max_examples=100, deadline=None)
+@given(n_hot=st.integers(1, 20), window=st.integers(1, 5))
+def test_starvation_window_after_bumps(n_hot, window):
+    """bump_skipped rounds count toward the starvation window exactly like
+    pops: after ``window`` passed-over rounds a starved entry must win the
+    next pop even against infinitely hot competitors."""
+    q = ReorderQueue(window=window)
+    q.push("starved", 0, 1000)
+    for i in range(n_hot):
+        q.push(f"hot{i}", 100, 1)
+    for _ in range(window):
+        q.bump_skipped(lambda it: it == "starved")
+    assert q.pop() == "starved"
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops=ops_strategy, window=st.integers(1, 8))
+def test_max_skipped_tracks_rounds(ops, window):
+    """max_skipped over live entries never exceeds the number of aging
+    rounds (pops + bumps) since the oldest live entry joined."""
+    q = ReorderQueue(window=window)
+    rounds = 0
+    next_id = 0
+    for op, a, b in ops:
+        if op == "push":
+            q.push(next_id, a, b)
+            next_id += 1
+        elif op == "pop":
+            if q.pop() is not None:
+                rounds += 1
+        elif op == "bump":
+            q.bump_skipped()
+            rounds += 1
+        elif op == "prune_one" and len(q):
+            live = q.peek_all()
+            q.prune(lambda it: it == live[a % len(live)])
+        elif op == "prune_even":
+            q.prune(lambda it: it % 2 == 0)
+        assert q.max_skipped() <= rounds
+    assert q.max_skipped() <= rounds

@@ -1,0 +1,330 @@
+"""Multi-replica doc-affinity routing: hypothesis properties over the
+``ReplicaRouter`` policy object plus a real-runtime N=1 vs N=3 e2e.
+
+Properties (the router's contract, see serving/router.py):
+  * same doc-set => same replica, absent escape-hatch / admission rerouting;
+  * the escape hatch bounds per-replica queue skew;
+  * the router never admits a request past a replica's pin budget.
+
+The e2e serves the identical trace through one continuous runtime and
+through three runtimes behind the affinity router and asserts (a) greedy
+tokens are bit-identical — routing never changes computation — and (b) no
+tree or paged-store state is referenced across replicas.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serving.router import (AFFINITY, LEAST_LOADED, ROUND_ROBIN,
+                                  ReplicaRouter, partition_requests,
+                                  stable_doc_hash)
+
+
+class _Bare:
+    """Replica handle with no tree and no admission: routing runs purely on
+    the router's shadow ledger + affinity hash."""
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit tests (run even without hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_stable_hash_is_process_independent():
+    # FNV-1a reference values: placement must be reproducible across runs
+    assert stable_doc_hash(()) == 0xcbf29ce484222325
+    assert stable_doc_hash((1, 2)) == stable_doc_hash([1, 2])
+    assert stable_doc_hash((1, 2)) != stable_doc_hash((2, 1))
+
+
+def test_same_docs_stick_and_prefix_attracts():
+    r = ReplicaRouter([_Bare(), _Bare(), _Bare()], policy=AFFINITY,
+                      max_queue_skew=100)
+    first = r.route((1, 2), (10, 20))
+    again = r.route((1, 2), (10, 20))
+    assert again.index == first.index
+    assert again.kind == "affinity"
+    assert again.overlap_tokens == 30
+    # a shared prefix is drawn to the same replica
+    sib = r.route((1, 3), (10, 5))
+    assert sib.index == first.index and sib.overlap_tokens == 10
+
+
+def test_round_robin_cycles_and_least_loaded_balances():
+    rr = ReplicaRouter([_Bare(), _Bare()], policy=ROUND_ROBIN)
+    assert [rr.route((7,)).index for _ in range(4)] == [0, 1, 0, 1]
+    ll = ReplicaRouter([_Bare(), _Bare()], policy=LEAST_LOADED)
+    assert [ll.route((7,)).index for _ in range(4)] == [0, 1, 0, 1]
+
+
+def test_cold_empty_docs_go_least_loaded():
+    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY)
+    busy = r.route((9,), (4,)).index
+    d = r.route((), ())
+    assert d.kind == "cold"
+    assert d.index == 1 - busy     # the idle replica
+
+
+def test_note_complete_guards_double_completion():
+    r = ReplicaRouter([_Bare()], policy=AFFINITY)
+    d = r.route((1,), (1,))
+    r.note_complete(d.index)
+    with pytest.raises(ValueError):
+        r.note_complete(d.index)
+
+
+def test_shadow_ledger_is_bounded():
+    """The shadow ledger is a bounded LRU of routed paths: old paths age
+    out (bounded memory for long-running routers), fresh paths keep their
+    affinity."""
+    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY,
+                      max_shadow_paths=8, max_queue_skew=10**9)
+    for i in range(100):
+        r.route((i, i + 1), (1, 1))
+
+    def count(node):
+        return sum(1 + count(c) for c in node.children.values())
+
+    assert sum(count(s) for s in r._shadow) <= 8 * 2
+    assert r.route((99, 100), (1, 1)).kind == "affinity"  # fresh: retained
+    assert r.route((0, 1), (1, 1)).kind == "hash"         # aged out
+
+
+def test_partition_window_drains_depth():
+    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY, max_queue_skew=2)
+    reqs = [(i % 5,) for i in range(40)]
+    shares = partition_requests(r, reqs, docs_of=lambda d: d, window=4)
+    assert sum(len(s) for s in shares) == len(reqs)
+    assert r.depth == [0, 0]
+    assert sum(r.routed) == len(reqs)
+    assert r.max_skew_observed <= 2
+
+
+# ---------------------------------------------------------------------------
+# admission mock (also used by the non-hypothesis admission test)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _MockAdmission:
+    """Stands in for serving.scheduler.PagedAdmission: a hard pin budget in
+    tokens, consumed by dispatches and released by completions."""
+    budget: int
+    used: int = 0
+    invalidated: int = 0
+
+    def invalidate(self):
+        self.invalidated += 1
+
+    def admissible(self, context_tokens, beta_tokens, promote_tokens=0):
+        return self.used + beta_tokens + promote_tokens <= self.budget
+
+
+class _Admitted:
+    def __init__(self, budget):
+        self.admission = _MockAdmission(budget)
+
+
+def test_admission_refusal_charges_nothing():
+    replicas = [_Admitted(3), _Admitted(3)]
+    router = ReplicaRouter(replicas, policy=AFFINITY)
+    ok = router.route((1,), (1,), context_tokens=2)
+    assert ok.admitted
+    replicas[ok.index].admission.used = 2
+    # both replicas now refuse a 4-token job: nothing is charged
+    no = router.route((2,), (1,), context_tokens=4)
+    assert not no.admitted
+    assert sum(router.depth) == 1 and sum(router.routed) == 1
+
+
+def test_admission_derives_beta_from_replica_tree():
+    """A replica that already caches the doc path is charged only the
+    residual beta, so it can admit a request a cold replica must refuse."""
+    class _Tree:
+        def __init__(self, cached):
+            self._cached = cached
+
+        def match_prefix(self, docs):
+            class _N:
+                n_tokens = self._cached
+                in_gpu = True
+            return [_N()] if self._cached else []
+
+    class _Replica:
+        def __init__(self, budget, cached):
+            self.admission = _MockAdmission(budget)
+            self.tree = _Tree(cached)
+
+    warm, cold = _Replica(10, cached=90), _Replica(10, cached=0)
+    router = ReplicaRouter([cold, warm], policy=AFFINITY)
+    # ctx=100: cold needs beta=100 > 10 (refuse); warm needs 10 (admit)
+    d = router.route((1,), (100,), context_tokens=100)
+    assert d.admitted and d.replica is warm
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped, not errored, when hypothesis is absent —
+# the unit tests and the e2e below must run regardless)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    doc_sets = st.lists(st.integers(0, 7), min_size=1, max_size=4).map(tuple)
+    traces = st.lists(doc_sets, min_size=1, max_size=60)
+
+    @settings(max_examples=100, deadline=None)
+    @given(trace=traces, n=st.integers(1, 4))
+    def test_same_docset_same_replica_absent_escapes(trace, n):
+        """With the escape hatch effectively off, routing is a
+        deterministic sticky assignment: every occurrence of a doc-set
+        lands on the replica its first occurrence chose."""
+        router = ReplicaRouter([_Bare() for _ in range(n)], policy=AFFINITY,
+                               max_queue_skew=10**9)
+        where = {}
+        for docs in trace:
+            d = router.route(docs, tuple(1 for _ in docs))
+            assert d.admitted
+            assert d.kind in ("affinity", "hash")
+            assert where.setdefault(docs, d.index) == d.index
+        assert router.escaped == 0
+
+    @settings(max_examples=100, deadline=None)
+    @given(trace=traces, n=st.integers(2, 4), skew=st.integers(1, 3),
+           completes=st.lists(st.booleans(), max_size=60))
+    def test_escape_hatch_bounds_queue_skew(trace, n, skew, completes):
+        """While requests only arrive, global max-min queue depth never
+        exceeds the bound; interleaving completions, no single dispatch
+        ever pushes its target more than the bound above the least-loaded
+        replica."""
+        router = ReplicaRouter([_Bare() for _ in range(n)], policy=AFFINITY,
+                               max_queue_skew=skew)
+        in_flight = []
+        drain = iter(completes)
+        for docs in trace:
+            d = router.route(docs, tuple(1 for _ in docs))
+            in_flight.append(d.index)
+            # routing-induced skew is bounded by construction...
+            assert router.depth[d.index] - min(router.depth) <= skew
+            if next(drain, False) and in_flight:
+                router.note_complete(in_flight.pop(0))
+        # ...and the router's own running record agrees
+        assert router.max_skew_observed <= skew
+        if not completes:
+            # arrivals only: the bound is global, not just per-dispatch
+            assert router.skew() <= skew
+
+    @settings(max_examples=100, deadline=None)
+    @given(trace=st.lists(st.tuples(doc_sets, st.integers(1, 6)),
+                          min_size=1, max_size=40),
+           n=st.integers(1, 3), budget=st.integers(2, 10),
+           completes=st.lists(st.booleans(), max_size=40))
+    def test_router_never_admits_past_pin_budget(trace, n, budget,
+                                                 completes):
+        """Every admitted dispatch fits the target replica's pin budget;
+        when no replica can admit, the decision comes back admitted=False
+        and charges nothing.  (Treeless replicas: beta == context.)"""
+        replicas = [_Admitted(budget) for _ in range(n)]
+        router = ReplicaRouter(replicas, policy=AFFINITY,
+                               max_queue_skew=10**9)
+        in_flight = []             # (replica index, beta) of admitted jobs
+        drain = iter(completes)
+        for docs, beta in trace:
+            d = router.route(docs, tuple(1 for _ in docs),
+                             context_tokens=beta)
+            adm = replicas[d.index].admission
+            if d.admitted:
+                assert adm.used + beta <= adm.budget, \
+                    "router admitted past the pin budget"
+                adm.used += beta
+                in_flight.append((d.index, beta))
+            else:
+                # refused: nothing charged anywhere, depths untouched
+                assert sum(router.depth) == len(in_flight)
+            for a in replicas:
+                assert a.admission.used <= a.admission.budget
+            if next(drain, False) and in_flight:
+                i, b = in_flight.pop(0)
+                replicas[i].admission.used -= b
+                router.note_complete(i)
+        assert all(a.admission.invalidated > 0 for a in replicas) \
+            or not trace
+
+
+# ---------------------------------------------------------------------------
+# e2e: N=1 vs N=3 on the real runtime — token identity + replica isolation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.retrieval.corpus import make_corpus, make_workload
+    from repro.retrieval.vectordb import IVFIndex
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_corpus(16, mean_doc_tokens=20, vocab=cfg.vocab_size,
+                         seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=6, nprobe=3)
+    wl = make_workload(corpus, n_requests=7, rate=100.0, question_tokens=8,
+                       vocab=cfg.vocab_size, zipf_s=1.3, seed=1)
+    return cfg, params, corpus, idx, wl
+
+
+def _serve_fleet(tiny_setup, n):
+    from repro.serving.runtime import ContinuousRuntime
+    cfg, params, corpus, idx, wl = tiny_setup
+    rts = [ContinuousRuntime(cfg, params, corpus, idx, top_k=2)
+           for _ in range(n)]
+    router = ReplicaRouter(rts, policy=AFFINITY, max_queue_skew=4)
+    shares = partition_requests(
+        router, wl, docs_of=lambda r: idx.search(r.query_vec, 2),
+        doc_tokens_of=lambda ds: [int(corpus.doc_lengths[d]) for d in ds],
+        window=8)
+    out = []
+    for rt, share in zip(rts, shares):
+        if share:
+            out.extend(rt.serve(share, max_new_tokens=3))
+    out.sort(key=lambda r: r.req_id)
+    return rts, router, out
+
+
+def test_n1_vs_n3_token_identity_and_isolation(tiny_setup):
+    _, _, one = _serve_fleet(tiny_setup, 1)
+    rts, router, three = _serve_fleet(tiny_setup, 3)
+    assert len(one) == len(three) == len(tiny_setup[4])
+    for a, b in zip(one, three):
+        assert a.req_id == b.req_id
+        assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
+    # every request actually served somewhere, none lost or duplicated
+    assert sum(router.routed) == len(three)
+    # replica isolation: trees never share nodes, and every GPU payload
+    # lives in its own replica's paged store (no cross-replica references)
+    node_owner = {}
+    for i, rt in enumerate(rts):
+        rt.tree.check_invariants()
+        rt.store.pool.check()
+        for node in rt.tree.nodes():
+            assert node_owner.setdefault(id(node), i) == i
+            if node.payload_gpu is not None:
+                assert node.payload_gpu.store is rt.store, \
+                    f"replica {i} tree references a foreign paged store"
+
+
+def test_fleet_metrics_report_renders(tiny_setup):
+    """Sanity on the fleet metrics plumbing: three replicas complete the
+    trace, and the FleetMetrics report renders with routing stats."""
+    from repro.serving.metrics import FleetMetrics
+    rts, router, res = _serve_fleet(tiny_setup, 3)
+    fleet = FleetMetrics(router.stats())
+    for i, rt in enumerate(rts):
+        fleet.add_replica(f"replica{i}", rt.metrics)
+    s = fleet.summary()
+    assert s["completed"] == len(res)
+    assert s["replicas"] == 3
+    report = fleet.format_report()
+    assert "cross-replica TTFT" in report and "routed per replica" in report

@@ -1,0 +1,46 @@
+"""In-process e2e for the ``launch/serve.py`` driver's main() — the A/B
+path (`--check-tokens`), the sequential engine, and multi-replica routing
+were previously only exercised by hand; this drives the real argument
+parser + drivers on a tiny config so CI catches flag/pipeline bitrot.
+"""
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.launch import serve  # noqa: E402
+
+TINY = ["--requests", "4", "--docs", "8", "--doc-tokens", "10",
+        "--top-k", "2", "--max-new-tokens", "2", "--rate", "100"]
+
+
+def _run_main(monkeypatch, capsys, extra):
+    monkeypatch.setattr("sys.argv", ["serve.py"] + TINY + extra)
+    serve.main()
+    return capsys.readouterr().out
+
+
+def test_main_check_tokens_single_replica(monkeypatch, capsys):
+    """Continuous vs sequential A/B on one replica: main() must run both
+    engines and report identical greedy tokens."""
+    out = _run_main(monkeypatch, capsys, ["--check-tokens"])
+    assert "[continuous]" in out and "[sequential]" in out
+    assert "token check: all 4 requests identical" in out
+
+
+def test_main_check_tokens_two_replicas(monkeypatch, capsys):
+    """--replicas 2 --routing affinity: routing never changes computation,
+    so the fleet's tokens stay bit-identical to the single sequential
+    engine, and the fleet report renders."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--check-tokens", "--replicas", "2",
+                     "--routing", "affinity"])
+    assert "continuous x2 (affinity)" in out
+    assert "token check: all 4 requests identical" in out
+    assert "fleet: 2 replicas" in out
+    assert "routed per replica" in out
+
+
+def test_main_sequential_only(monkeypatch, capsys):
+    out = _run_main(monkeypatch, capsys, ["--sequential"])
+    assert "[sequential] served 4 requests" in out
+    assert "[continuous]" not in out
