@@ -1,6 +1,9 @@
 """Kernel-layer bench: Pallas prefix-attention grid/VMEM accounting + CPU
-oracle agreement, and the jnp flash path wall-clock (the actual CPU compute
-path; interpret-mode kernel timing is not meaningful).
+oracle agreement, the jnp flash path wall-clock (the actual CPU compute
+path; interpret-mode kernel timing is not meaningful), and the serving-shape
+decode comparison: dense-gather ``decode_step`` vs kernel-backed
+``paged_decode_step`` straight from the pool (the `--attn dense|paged` A/B
+that PR 5 wired into the runtime).
 """
 from __future__ import annotations
 
@@ -8,9 +11,94 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks.common import smoke_clamp
+from repro.configs import get_reduced
 from repro.kernels import ops, ref
 from repro.models import layers as L
+from repro.models import model as M
+
+
+def _paged_decode_rows() -> list:
+    """Dense-gather vs paged decode at serving shapes: one decode iteration
+    of the reduced model, B requests of ctx tokens in a 16-token-block pool
+    (the continuous runtime's exact layout), steady-state (post-jit)."""
+    rows = []
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    bs = 16
+    B = 4
+    ctx = smoke_clamp(512, 64)
+    reps = smoke_clamp(10, 2)
+    nb_req = -(-ctx // bs)
+    n_blocks = B * nb_req + 1                       # block 0 = scratch
+    S = nb_req * bs
+    key = jax.random.PRNGKey(1)
+    kp = jax.random.normal(key, (cfg.n_layers, n_blocks, bs, cfg.n_kv_heads,
+                                 cfg.hd))
+    vp = kp * 0.5
+    toks = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.full((B,), ctx, jnp.int32)            # ctx incl. the new token
+    # request b owns blocks [1 + b*nb_req, ...) — contiguous runs
+    tables = np.asarray([[1 + b * nb_req + j for j in range(nb_req)]
+                         for b in range(B)], np.int32)
+    blk_map = np.repeat(tables, bs, axis=1)         # (B, S) token-level maps
+    slot_map = np.tile(np.arange(S, dtype=np.int32) % bs, (B, 1))
+    counts = np.full((B, nb_req), bs, np.int32)
+    counts[:, -1] = ctx - (nb_req - 1) * bs
+    starts = np.asarray([[j * bs for j in range(nb_req)]] * B, np.int32)
+    wblk = tables[:, (ctx - 1) // bs]
+    wslot = np.full((B,), (ctx - 1) % bs, np.int32)
+
+    def dense_step(params, toks, blk_map, slot_map, lengths, kp, vp):
+        k = kp[:, blk_map, slot_map]                # (L, B, S, KV, hd)
+        v = vp[:, blk_map, slot_map]
+        logits, _ = M.decode_step(cfg, params, toks, {"k": k, "v": v},
+                                  lengths + 1)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    def paged_step(params, toks, tables, counts, starts, pos, wblk, wslot,
+                   kp, vp):
+        logits, kp, vp = M.paged_decode_step(
+            cfg, params, toks, kp, vp, tables, counts, starts, wblk, wslot,
+            pos, attn_impl="jnp")
+        return jnp.argmax(logits[:, -1], axis=-1), kp, vp
+
+    dense = jax.jit(dense_step)
+    paged = jax.jit(paged_step, donate_argnums=(8, 9))
+    lengths = pos - 1
+    args_d = (jnp.asarray(toks), jnp.asarray(blk_map), jnp.asarray(slot_map),
+              jnp.asarray(lengths))
+    args_p = (jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(counts),
+              jnp.asarray(starts), jnp.asarray(pos), jnp.asarray(wblk),
+              jnp.asarray(wslot))
+    dense(params, *args_d, kp, vp).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_d = dense(params, *args_d, kp, vp)
+    out_d.block_until_ready()
+    dt_d = (time.perf_counter() - t0) / reps
+    _, kp, vp = paged(params, *args_p, kp, vp)      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_p, kp, vp = paged(params, *args_p, kp, vp)
+    out_p.block_until_ready()
+    dt_p = (time.perf_counter() - t0) / reps
+    if not bool((np.asarray(out_d) == np.asarray(out_p)).all()):
+        # hard-fail the smoke lane: paged vs dense greedy-token divergence
+        # is the regression this bench exists to catch, not a number to log
+        raise RuntimeError(
+            f"paged decode diverged from dense decode at bench shapes: "
+            f"dense={np.asarray(out_d).tolist()} "
+            f"paged={np.asarray(out_p).tolist()}")
+    gathered = cfg.n_layers * B * S * cfg.n_kv_heads * cfg.hd
+    rows.append((f"kernel/decode_dense_gather/B{B}_ctx{ctx}", dt_d * 1e6,
+                 f"dense_elems={gathered} per_iter"))
+    rows.append((f"kernel/decode_paged/B{B}_ctx{ctx}", dt_p * 1e6,
+                 f"speedup_vs_dense={dt_d / max(dt_p, 1e-12):.2f}x "
+                 f"tokens_match=True"))
+    return rows
 
 
 def run() -> list:
@@ -48,4 +136,5 @@ def run() -> list:
         fn(qf, kf, vf).block_until_ready()
     rows.append(("kernel/flash_jnp/cpu_wallclock",
                  (time.perf_counter() - t0) / 10 * 1e6, "jit path"))
+    rows.extend(_paged_decode_rows())
     return rows

@@ -1,14 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Usage:
-    PYTHONPATH=src python -m benchmarks.run [--smoke] [module ...]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--json FILE] [module ...]
 
-``--smoke``: run every fig*/tab*/throughput_* benchmark at minimum size and
-exit non-zero if any raises — the CI slow lane runs this so benchmark
-scripts cannot bitrot silently.  Smoke numbers are meaningless.
+``--smoke``: run every fig*/tab*/throughput_* benchmark plus kernel_bench at
+minimum size and exit non-zero if any raises — the CI slow lane runs this so
+benchmark scripts cannot bitrot silently.  Smoke numbers are meaningless.
+
+``--json FILE``: additionally write the rows as a JSON document
+``{"smoke": bool, "rows": [{"module", "name", "us_per_call", "derived"}]}``
+— CI uploads this per main-commit (actions/upload-artifact) so the perf
+trajectory, including the dense-vs-paged decode comparison in kernel_bench,
+is recorded instead of discarded with the job log.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -35,17 +42,29 @@ def main() -> None:
     import importlib
     args = list(sys.argv[1:])
     smoke = "--smoke" in args
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args) or args[i + 1].startswith("-"):
+            print("benchmarks.run: --json requires a FILE argument\n"
+                  "usage: python -m benchmarks.run [--smoke] [--json FILE] "
+                  "[module ...]", file=sys.stderr)
+            sys.exit(2)
+        json_path = args[i + 1]
+        del args[i:i + 2]
     if smoke:
         args.remove("--smoke")
         from benchmarks import common
         common.SMOKE = True
         default = [m for m in MODULES
-                   if m.startswith(("fig", "tab", "throughput_"))]
+                   if m.startswith(("fig", "tab", "throughput_"))
+                   or m == "kernel_bench"]
     else:
         default = MODULES
     wanted = args or default
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for name in wanted:
         t0 = time.time()
         try:
@@ -53,12 +72,24 @@ def main() -> None:
             rows = mod.run()
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            records.append({"module": name, "name": f"{name}/ERROR",
+                            "us_per_call": 0.0,
+                            "derived": f"{type(e).__name__}: {e}"})
             failures += 1
             continue
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.1f},{str(derived).replace(',', ';')}")
-        print(f"{name}/_total,{(time.time() - t0) * 1e6:.0f},bench wall time",
-              flush=True)
+            records.append({"module": name, "name": row_name,
+                            "us_per_call": float(us),
+                            "derived": str(derived)})
+        wall = (time.time() - t0) * 1e6
+        print(f"{name}/_total,{wall:.0f},bench wall time", flush=True)
+        records.append({"module": name, "name": f"{name}/_total",
+                        "us_per_call": wall, "derived": "bench wall time"})
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"smoke": smoke, "rows": records}, f, indent=1)
+        print(f"wrote {len(records)} rows to {json_path}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

@@ -16,7 +16,10 @@ cd "$(dirname "$0")/.."
 # detection (e.g. a bare `bash scripts/ci.sh` in a hosted runner).
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-TIMEOUT="${CI_TIMEOUT:-1800}"
+# 45 min: the full suite (incl. the paged-decode parity sweep added in
+# PR 5) runs ~22 min on a 2-core runner; leave 2x headroom before the
+# job-level 60-min kill so the distinct 124 exit still fires first.
+TIMEOUT="${CI_TIMEOUT:-2700}"
 PYTEST_ARGS=(-q)
 for arg in "$@"; do
     case "$arg" in

@@ -39,3 +39,34 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
     interp = (not _on_tpu()) if interpret is None else interpret
     return _pg.paged_attention(q, k_pages, v_pages, block_tables, lengths,
                                interpret=interp)
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, counts, starts, qpos,
+                           layer, window, *, logit_cap: float = 0.0,
+                           impl: str | None = None):
+    """Decode attention straight from the pool's layer-major page arrays
+    (the serving runtime's steady-state hot path; see paged_attention.py for
+    the run/slot-mapping contract).  Dispatch:
+
+      impl=None        -> compiled Pallas kernel on TPU, pure-jnp per-page
+                          online softmax elsewhere (the CPU execution path)
+      impl="pallas"    -> force the compiled kernel
+      impl="interpret" -> Pallas kernel body in interpret mode (tests: runs
+                          the BlockSpec/grid logic bit-for-bit on CPU)
+      impl="jnp"       -> force the jnp path
+
+    Not jit-wrapped: this is called per-layer inside the (already jitted)
+    decode step's layer scan, where ``layer``/``window`` are traced values.
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return _pg.paged_decode_jnp(q, k_pages, v_pages, tables, counts,
+                                    starts, qpos, layer, window,
+                                    logit_cap=logit_cap)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown paged-attention impl {impl!r}")
+    return _pg.paged_decode_attention(q, k_pages, v_pages, tables, counts,
+                                      starts, qpos, layer, window,
+                                      logit_cap=logit_cap,
+                                      interpret=impl == "interpret")

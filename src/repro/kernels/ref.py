@@ -25,6 +25,39 @@ def reference_prefix_attention(q, k, v, *, prefix_len: int, window: int = 0):
     return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
 
 
+def reference_paged_decode(q, k_pages, v_pages, tables, counts, starts, qpos,
+                           layer, window=0, logit_cap=0.0):
+    """Dense oracle for the layer-major paged decode kernel.
+
+    q: (B, H, hd); k/v_pages: (L, n_pages, page, KV, hd); tables/counts/
+    starts: (B, n_slots) run descriptors (see paged_attention.py docstring);
+    qpos: (B,) absolute query position; layer selects the page plane.
+    """
+    B, H, hd = q.shape
+    page, KV = k_pages.shape[2], k_pages.shape[3]
+    R = H // KV
+    nb = tables.shape[1]
+    k = k_pages[layer][tables]           # (B, nb, page, KV, hd)
+    v = v_pages[layer][tables]
+    k = k.reshape(B, nb * page, KV, hd)
+    v = v.reshape(B, nb * page, KV, hd)
+    kf = jnp.repeat(k, R, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, R, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kf) * hd ** -0.5
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    slot = jnp.arange(page)
+    live = slot[None, None] < counts[..., None]              # (B, nb, page)
+    pos = starts[..., None] + slot[None, None]
+    if window:
+        live &= pos > qpos[:, None, None] - window
+    live = live.reshape(B, nb * page)
+    s = jnp.where(live[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(live[:, None], p, 0.0)     # all-masked row -> 0, not NaN/avg
+    return jnp.einsum("bhk,bkhd->bhd", p, vf).astype(q.dtype)
+
+
 def reference_paged_attention(q, k_pages, v_pages, block_tables, lengths):
     """q: (B, H, hd); k/v_pages: (n_pages, page, KV, hd);
     block_tables: (B, n_blocks_max) int32; lengths: (B,) valid tokens."""

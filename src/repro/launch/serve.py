@@ -93,6 +93,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "continuous mode)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged-KV block size in tokens (continuous mode)")
+    ap.add_argument("--attn", default="auto",
+                    choices=["dense", "paged", "auto"],
+                    help="continuous-mode decode attention engine: 'paged' "
+                         "attends straight from the pool's page arrays "
+                         "(Pallas kernel on TPU, per-page jnp online "
+                         "softmax on CPU; O(live tokens) per iteration); "
+                         "'dense' re-materializes the full (L, B, S, KV, "
+                         "hd) context every iteration (A/B baseline); 'auto' "
+                         "= paged.  Greedy tokens are bit-identical across "
+                         "modes; the sequential engine is always dense")
     ap.add_argument("--rate", type=float, default=100.0,
                     help="Poisson arrival rate (req/s)")
     ap.add_argument("--search-scale", type=float, default=1.0,
@@ -165,6 +175,7 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
         disk_cache_dir=args.disk_cache_dir,
         reorder=not args.no_reorder, speculative=not args.no_spec,
         max_batch=args.max_batch, block_size=args.block_size,
+        attn=args.attn,
         prefill_chunk=args.prefill_chunk,
         max_prefill_tokens=args.max_prefill_tokens,
         search_time_scale=args.search_scale) for _ in range(n)]

@@ -537,6 +537,57 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
     return cache
 
 
+def paged_decode_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
+                      tables, counts, starts, write_blk, write_slot, pos,
+                      *, attn_impl: str | None = None):
+    """One decode iteration straight against the paged pool (RAGCache's
+    steady-state hot path: no dense (L, B, S, KV, hd) re-materialization).
+
+    k_pages/v_pages: the ``PagedKVStore`` buffers, (L, n_blocks, block, KV,
+    hd).  tables/counts/starts: (B, n_slots) per-request run descriptors
+    (token-level slot mapping compressed to runs — see
+    kernels/paged_attention.py for the contract).  write_blk/write_slot:
+    (B,) page coordinates of the token being decoded — its KV is appended
+    in place per layer BEFORE attention, and ``counts`` must already
+    include it.  pos: (B,) sequence length *including* that token (same
+    semantics as ``decode_step``).
+
+    Returns (logits, k_pages, v_pages).  Attention families only —
+    recurrent state cannot be paged per-block.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("paged decode requires per-token KV; "
+                         "ssm/hybrid families use decode_step")
+    from repro.kernels import ops
+
+    x = embed_inputs(cfg, params, {"tokens": tokens})
+    B = x.shape[0]
+    windows = _layer_windows_arr(cfg)
+    rope_pos = (pos - 1)[:, None]
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        p, w, li = xs
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, h)                          # S == 1
+        q = L.apply_rope(q, rope_pos, cfg.rope_theta)
+        k = L.apply_rope(k, rope_pos, cfg.rope_theta)
+        kp = kp.at[li, write_blk, write_slot].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[li, write_blk, write_slot].set(v[:, 0].astype(vp.dtype))
+        o = ops.paged_decode_attention(
+            q[:, 0], kp, vp, tables, counts, starts, pos - 1, li, w,
+            logit_cap=cfg.attn_logit_softcap, impl=attn_impl)
+        x = x + L.dense(o.reshape(B, 1, -1), p["wo"])
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(cfg, p, h2)
+        return (x, kp, vp), None
+
+    (x, k_pages, v_pages), _ = lax.scan(
+        body, (x, k_pages, v_pages),
+        (params["blocks"], windows, jnp.arange(cfg.n_layers)))
+    return lm_logits(cfg, params, x), k_pages, v_pages
+
+
 def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
     """One decode iteration.
 

@@ -21,8 +21,14 @@ concurrent requests, with
     token-level slot mapping (position -> (block, slot)); EVERY cached
     knowledge-tree document segment of the hit prefix is REFCOUNT-SHARED
     into it — block-aligned or not, since the mapping absorbs unaligned
-    tails — and every iteration does one slot-map gather + one token
-    scatter;
+    tails.  With ``attn="paged"`` (the default via "auto") each iteration
+    runs per-layer paged attention STRAIGHT from the pool's page arrays
+    through run tables (kernels/paged_attention.py: Pallas kernel on TPU,
+    per-page jnp online softmax on CPU) and appends the new token's KV in
+    place at its (block, slot) — nothing materializes the dense
+    (L, B, S, KV, hd) context.  ``attn="dense"`` keeps the old slot-map
+    gather + token scatter as an A/B baseline; greedy tokens are
+    bit-identical across modes;
   * admission control and preemption by paged-block / tree-pin budget via
     the shared ``ContinuousBatchScheduler`` (the same policy object the
     discrete-event simulator executes) — the pin budget counts promote
@@ -233,6 +239,8 @@ class ContinuousRuntime:
         max_prefill_tokens: int = 0,
         block_size: int = 16,
         n_blocks: Optional[int] = None,
+        attn: str = "auto",
+        attn_impl: Optional[str] = None,
         search_time_scale: float = 1.0,
         profiler: Optional[CostProfiler] = None,
     ):
@@ -240,6 +248,13 @@ class ContinuousRuntime:
             raise ValueError(
                 "recurrent-state families cannot be paged per-block; "
                 "use the sequential RAGServer for ssm/hybrid")
+        if attn not in ("dense", "paged", "auto"):
+            raise ValueError(f"unknown attn mode {attn!r}")
+        # "auto" resolves to the paged engine: Pallas kernel on TPU, the
+        # pure-jnp per-page path elsewhere (kernels/ops.py dispatch).  The
+        # dense gather survives only as the explicit --attn dense baseline.
+        self.attn = "paged" if attn == "auto" else attn
+        self.attn_impl = attn_impl
         self.cfg = cfg
         self.params = params
         self.corpus = corpus
@@ -288,6 +303,7 @@ class ContinuousRuntime:
             static_argnames=("pl",))
         self._decode_fn = None        # built in serve() once n_slots is known
         self._n_slots = 0
+        self._n_tbl = 0               # run-table width (paged mode)
         # event loop
         self.now = 0.0
         self._events: List = []
@@ -352,6 +368,10 @@ class ContinuousRuntime:
                 f"lower top_k/doc length")
         if n_slots != self._n_slots or self._decode_fn is None:
             self._n_slots = n_slots
+            # paged mode reads runs, not a contiguous span: every segment of
+            # the slot mapping (<= top_k shared docs + 1 private) may end
+            # mid-block, wasting at most one table entry each
+            self._n_tbl = n_slots + self.top_k + 1
             self._build_decode_fn()
         first = len(self._all)
         for r in requests:
@@ -862,6 +882,70 @@ class ContinuousRuntime:
     # ---- batched decode ------------------------------------------------
 
     def _build_decode_fn(self) -> None:
+        if self.attn == "paged":
+            self._build_paged_decode_fn()
+        else:
+            self._build_dense_decode_fn()
+
+    def _build_paged_decode_fn(self) -> None:
+        """Decode attention straight from the pool's page arrays: per-layer
+        paged attention through run tables (kernels/ops.py dispatch — Pallas
+        on TPU, per-page jnp online softmax on CPU), new-token KV appended
+        in place at its (block, slot).  Nothing here scales with the dense
+        max-context span S — the steady-state iteration touches live pages
+        only."""
+        cfg = self.cfg
+        impl = self.attn_impl
+
+        def step(params, toks, tables, counts, starts, pos,
+                 write_blk, write_slot, k_pages, v_pages):
+            logits, k_pages, v_pages = M.paged_decode_step(
+                cfg, params, toks, k_pages, v_pages, tables, counts, starts,
+                write_blk, write_slot, pos, attn_impl=impl)
+            return jnp.argmax(logits[:, -1], axis=-1), k_pages, v_pages
+
+        self._decode_fn = jax.jit(step, donate_argnums=(8, 9))
+        # warm up the single decode shape (dummy rows decode token 0 into
+        # the scratch block, exactly like a padding row in _start_decode)
+        args = self._paged_decode_args([])
+        _, self.store.k, self.store.v = self._decode_fn(
+            self.params, *args, self.store.k, self.store.v)
+        jax.block_until_ready(self.store.k)
+
+    def _paged_decode_args(self, batch):
+        """Pack the run tables for one paged decode iteration.  Contract
+        (kernels/paged_attention.py): the slot mapping is a list of runs,
+        each starting at slot 0 of its block — run boundaries are exactly
+        the positions with pos_slot == 0."""
+        B = self.sched.config.max_batch
+        T = self._n_tbl
+        toks = np.zeros((B, 1), np.int32)
+        tables = np.full((B, T), self._scratch_block, np.int32)
+        counts = np.zeros((B, T), np.int32)
+        starts = np.zeros((B, T), np.int32)
+        pos = np.ones((B,), np.int32)
+        write_blk = np.full((B,), self._scratch_block, np.int32)
+        write_slot = np.zeros((B,), np.int32)
+        counts[:, 0] = 1               # dummy rows attend their scratch write
+        for i, st in enumerate(batch):
+            n = st.length + 1          # incl. the token decoded this step
+            blk = np.asarray(st.pos_blk[:n], np.int32)
+            slot = np.asarray(st.pos_slot[:n], np.int32)
+            run = np.flatnonzero(slot == 0)
+            assert len(run) <= T, (len(run), T)
+            counts[i] = 0
+            tables[i, :len(run)] = blk[run]
+            counts[i, :len(run)] = np.diff(np.append(run, n))
+            starts[i, :len(run)] = run
+            pos[i] = n
+            toks[i, 0] = st.last_tok
+            write_blk[i] = st.pos_blk[st.length]
+            write_slot[i] = st.pos_slot[st.length]
+        return (jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(counts),
+                jnp.asarray(starts), jnp.asarray(pos),
+                jnp.asarray(write_blk), jnp.asarray(write_slot))
+
+    def _build_dense_decode_fn(self) -> None:
         cfg = self.cfg
         B = self.sched.config.max_batch
         S = self._n_slots * self.store.block_size   # max token positions
@@ -898,6 +982,23 @@ class ContinuousRuntime:
 
     def _start_decode(self) -> None:
         batch = self.running[:self.sched.config.max_batch]
+        self.engine_busy = True
+        self.metrics.record_iteration("decode", len(batch))
+        t0 = time.perf_counter()
+        if self.attn == "paged":
+            args = self._paged_decode_args(batch)
+            next_toks, self.store.k, self.store.v = self._decode_fn(
+                self.params, *args, self.store.k, self.store.v)
+        else:
+            next_toks, self.store.k, self.store.v = self._decode_fn(
+                self.params, *self._dense_decode_args(batch),
+                self.store.k, self.store.v)
+        next_toks = np.asarray(jax.block_until_ready(next_toks))
+        dt = time.perf_counter() - t0
+        self._push(self.now + dt, "decode_done",
+                   (batch, [int(t) for t in next_toks[:len(batch)]]))
+
+    def _dense_decode_args(self, batch):
         B = self.sched.config.max_batch
         S = self._n_slots * self.store.block_size
         toks = np.zeros((B, 1), np.int32)
@@ -909,17 +1010,8 @@ class ContinuousRuntime:
             blk_map[i, :len(st.pos_blk)] = st.pos_blk
             slot_map[i, :len(st.pos_slot)] = st.pos_slot
             lengths[i] = st.length
-        self.engine_busy = True
-        self.metrics.record_iteration("decode", len(batch))
-        t0 = time.perf_counter()
-        next_toks, self.store.k, self.store.v = self._decode_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(blk_map),
-            jnp.asarray(slot_map), jnp.asarray(lengths),
-            self.store.k, self.store.v)
-        next_toks = np.asarray(jax.block_until_ready(next_toks))
-        dt = time.perf_counter() - t0
-        self._push(self.now + dt, "decode_done",
-                   (batch, [int(t) for t in next_toks[:len(batch)]]))
+        return (jnp.asarray(toks), jnp.asarray(blk_map),
+                jnp.asarray(slot_map), jnp.asarray(lengths))
 
     def _on_decode_done(self, payload) -> None:
         batch, toks = payload

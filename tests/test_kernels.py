@@ -7,6 +7,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# interpret-mode parity sweeps are minutes-scale: the CI `kernels` lane
+# runs this file on every push/PR; the fast lane skips it (slow marker)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

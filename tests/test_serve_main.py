@@ -40,6 +40,23 @@ def test_main_check_tokens_two_replicas(monkeypatch, capsys):
     assert "routed per replica" in out
 
 
+def test_main_check_tokens_paged_attn(monkeypatch, capsys):
+    """--attn paged: decode straight from the paged pool must keep greedy
+    tokens bit-identical to the (dense) sequential engine."""
+    out = _run_main(monkeypatch, capsys, ["--check-tokens", "--attn", "paged"])
+    assert "token check: all 4 requests identical" in out
+
+
+def test_main_check_tokens_paged_attn_three_replicas(monkeypatch, capsys):
+    """--attn paged at N=3: every replica decodes through the kernel-backed
+    paged path; the fleet's tokens still match the single dense sequential
+    engine exactly."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--check-tokens", "--attn", "paged", "--replicas", "3"])
+    assert "continuous x3 (affinity)" in out
+    assert "token check: all 4 requests identical" in out
+
+
 def test_main_sequential_only(monkeypatch, capsys):
     out = _run_main(monkeypatch, capsys, ["--sequential"])
     assert "[sequential] served 4 requests" in out
