@@ -1,0 +1,144 @@
+"""Front-door sweep: query-level cache + SLO admission + autoscaler A/B.
+
+At the "millions of users" scale many requests should never reach an
+engine: QA traffic repeats itself, and a query-level cache of retrieval
+results + finished answers absorbs the repeats (SNIPPETS.md §1;
+serving/frontdoor.py).  This sweep drives the SAME ``FrontDoor`` policy
+stack the real driver uses (``launch/serve.py --frontdoor``) over
+simulated replica fleets on the multi-tenant traffic model
+(retrieval/traffic.py) and asserts the headline claims:
+
+  * on a repeat-heavy workload (small canonical query pools, drift off),
+    front-door-on mean TTFT is STRICTLY below front-door-off;
+  * the autoscaler's active replica count stays within its configured
+    [min, max] bounds under a Markov-modulated bursty trace;
+  * TTL expiry bounds staleness: with TTL shorter than the trace, entries
+    expire and the hit rate drops below the no-TTL ceiling.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PROFILES, smoke_clamp
+from repro.retrieval.corpus import make_corpus
+from repro.retrieval.traffic import (TrafficConfig, default_tenants,
+                                     make_tenant_workload, repeat_rate)
+from repro.retrieval.vectordb import IVFIndex
+from repro.serving.frontdoor import TenantSLO, make_frontdoor
+from repro.serving.simulator import (SimConfig, simulate_frontdoor,
+                                     simulate_replicas)
+
+PROFILE = PROFILES["mistral-7b"]
+
+
+def _setup(n_requests: int, *, n_queries: int = 8, burst_mult: float = 1.0,
+           rate: float = 20.0, seed: int = 1):
+    n_docs = smoke_clamp(400, 60)
+    corpus = make_corpus(n_docs, mean_doc_tokens=smoke_clamp(600, 120),
+                         seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=max(4, n_docs // 12),
+                   nprobe=8, seed=0)
+    tenants = default_tenants(2, zipf_s=1.3, n_queries=n_queries)
+    cfg = TrafficConfig(n_requests=n_requests, base_rate=rate, seed=seed,
+                        burst_rate_mult=burst_mult,
+                        diurnal_amplitude=0.3 if burst_mult > 1.0 else 0.0)
+    wl = make_tenant_workload(corpus, tenants, cfg)
+    return corpus, idx, tenants, wl
+
+
+def _slos(tenants):
+    return {t.name: TenantSLO(ttft_target=t.slo_ttft_ms / 1e3,
+                              min_top_k=t.min_top_k) for t in tenants}
+
+
+def run() -> list:
+    rows = []
+    n_req = smoke_clamp(200, 80)
+
+    # ---- headline: front door on vs off, repeat-heavy trace --------------
+    corpus, idx, tenants, wl = _setup(n_req, n_queries=8)
+    rr = repeat_rate(wl)
+    sim_kw = dict(profile=PROFILE, top_k=2, gpu_cache_bytes=4 * 2**30,
+                  host_cache_bytes=32 * 2**30)
+    off = simulate_replicas(SimConfig(**sim_kw), corpus, idx, wl,
+                            n_replicas=2)
+    # generous SLOs for the headline A/B: nothing sheds or degrades, so
+    # the TTFT delta is the query cache alone
+    fd = make_frontdoor(capacity=256, ttl=1e9, sim_threshold=0.98,
+                        slos={t.name: TenantSLO(ttft_target=1e9)
+                              for t in tenants},
+                        top_k=2, init_service=1e-6)
+    on = simulate_frontdoor(SimConfig(**sim_kw), corpus, idx, wl, fd,
+                            n_replicas=2)
+    assert not on.partition.shed, "headline A/B must not shed"
+    hit_rate = on.frontdoor_stats["hit_rate"]
+    rows.append(("fig_frontdoor/off", off.metrics.avg_ttft * 1e6,
+                 f"mean_ttft={off.metrics.avg_ttft:.4f}s "
+                 f"p99={off.metrics.p99_ttft:.3f}s repeat_rate={rr:.2f}"))
+    rows.append(("fig_frontdoor/on", on.metrics.avg_ttft * 1e6,
+                 f"mean_ttft={on.metrics.avg_ttft:.4f}s "
+                 f"p99={on.metrics.p99_ttft:.3f}s hit_rate={hit_rate:.2f} "
+                 f"hits={len(on.partition.hits)} "
+                 f"misses={len(on.partition.misses)}"))
+    assert on.metrics.avg_ttft < off.metrics.avg_ttft, (
+        f"front door stopped paying for itself: on "
+        f"{on.metrics.avg_ttft:.4f}s >= off {off.metrics.avg_ttft:.4f}s "
+        f"at repeat rate {rr:.2f}")
+    rows.append(("fig_frontdoor/claim/on_beats_off",
+                 (off.metrics.avg_ttft - on.metrics.avg_ttft) * 1e6,
+                 f"on={on.metrics.avg_ttft:.4f}s < "
+                 f"off={off.metrics.avg_ttft:.4f}s "
+                 f"({off.metrics.avg_ttft / max(on.metrics.avg_ttft, 1e-12):.2f}x)"))
+
+    # ---- TTL sweep: staleness bound costs hit rate -----------------------
+    prev_hits = None
+    for ttl in (1e9, 2.0, 0.2):
+        corpus2, idx2, tenants2, wl2 = _setup(n_req, n_queries=8)
+        fd = make_frontdoor(capacity=256, ttl=ttl, sim_threshold=0.98,
+                            slos={t.name: TenantSLO(ttft_target=1e9)
+                                  for t in tenants2},
+                            top_k=2, init_service=1e-6)
+        res = simulate_frontdoor(SimConfig(**sim_kw), corpus2, idx2, wl2,
+                                 fd, n_replicas=2)
+        cs = res.frontdoor_stats["cache"]
+        hits = cs["hits_exact"] + cs["hits_similar"]
+        rows.append((f"fig_frontdoor/ttl_{ttl:g}",
+                     res.metrics.avg_ttft * 1e6,
+                     f"hits={hits} expired={cs['expired']} "
+                     f"hit_rate={res.frontdoor_stats['hit_rate']:.2f}"))
+        if prev_hits is not None:
+            assert hits <= prev_hits, (
+                f"shorter TTL {ttl} produced MORE hits ({hits} > "
+                f"{prev_hits}) — expiry is not expiring")
+        prev_hits = hits
+
+    # ---- autoscaler under bursts: bounds + SLO admission -----------------
+    corpus3, idx3, tenants3, wl3 = _setup(n_req, n_queries=8,
+                                          burst_mult=6.0, rate=40.0,
+                                          seed=2)
+    lo, hi = 1, 3
+    fd = make_frontdoor(capacity=256, ttl=1e9, sim_threshold=0.98,
+                        slos=_slos(tenants3), top_k=2,
+                        min_replicas=lo, max_replicas=hi, autoscale=True,
+                        scale_up_backlog=2.0, scale_down_backlog=0.5,
+                        cooldown=0.05)
+    res = simulate_frontdoor(SimConfig(**sim_kw), corpus3, idx3, wl3, fd,
+                             n_replicas=hi)
+    scale = res.frontdoor_stats["autoscale"]
+    assert lo <= scale["min_seen"] and scale["max_seen"] <= hi, (
+        f"autoscaler left its bounds: saw "
+        f"[{scale['min_seen']}, {scale['max_seen']}] outside [{lo}, {hi}]")
+    att = res.frontdoor_stats["slo_attainment"]
+    att_s = " ".join(f"{t}={v['fraction']:.2f}" for t, v in att.items())
+    rows.append(("fig_frontdoor/autoscale_burst",
+                 res.metrics.avg_ttft * 1e6,
+                 f"active_range=[{scale['min_seen']},{scale['max_seen']}] "
+                 f"bounds=[{lo},{hi}] events={len(scale['events'])} "
+                 f"shed={res.frontdoor_stats['shed_total']} "
+                 f"degraded={res.frontdoor_stats['degraded']} "
+                 f"slo_attainment: {att_s}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

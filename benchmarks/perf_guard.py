@@ -1,0 +1,113 @@
+"""Perf-regression guard over ``benchmarks.run --json`` artifacts.
+
+The CI slow lane uploads ``bench_smoke.json`` per main commit; this module
+compares the current run against the previous main artifact (when one can
+be downloaded) and fails on a >``max_ratio`` regression of the tracked
+smoke-TTFT rows.  Tolerant by design:
+
+  * no baseline (first run, expired artifact, download failed) -> pass;
+  * rows missing from either side (benchmarks added/removed) -> ignored;
+  * error/system rows (``*/ERROR``, ``*/_total`` wall times) -> ignored —
+    wall time on a shared runner is noise, the analytic simulator TTFTs
+    are not.
+
+Only rows whose names match ``TRACKED`` prefixes guard: these are
+simulator-computed TTFT figures (deterministic given the config), so a 2x
+jump is a real policy/cost-model regression, not runner jitter.
+
+Usage (what ci.yml runs):
+    python -m benchmarks.perf_guard baseline.json current.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# analytic (simulator) TTFT rows — deterministic, safe to gate on
+TRACKED = (
+    "fig_frontdoor/",
+    "fig_replica/",
+    "fig13_",
+)
+MAX_RATIO = 2.0
+# smoke rows below this are dominated by fixed overheads; a ratio on a
+# near-zero denominator is meaningless
+MIN_BASELINE_US = 100.0
+
+
+def _rows(doc: dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for row in doc.get("rows", []):
+        name = row.get("name", "")
+        if name.endswith(("/_total", "/ERROR")):
+            continue
+        if not name.startswith(TRACKED):
+            continue
+        try:
+            us = float(row.get("us_per_call", 0.0))
+        except (TypeError, ValueError):
+            continue
+        if us > 0.0:
+            out[name] = us
+    return out
+
+
+def compare(baseline: dict, current: dict, *,
+            max_ratio: float = MAX_RATIO
+            ) -> Tuple[List[str], List[str]]:
+    """(regressions, notes).  Empty regressions list = pass."""
+    base = _rows(baseline)
+    cur = _rows(current)
+    if baseline.get("smoke") != current.get("smoke"):
+        return [], ["baseline and current ran at different sizes "
+                    "(smoke flag differs); skipping comparison"]
+    regressions, notes = [], []
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        if b < MIN_BASELINE_US:
+            continue
+        ratio = c / b
+        line = f"{name}: {b:.1f} -> {c:.1f} us ({ratio:.2f}x)"
+        if ratio > max_ratio:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    only = sorted(set(cur) - set(base))
+    if only:
+        notes.append(f"new rows (no baseline): {', '.join(only)}")
+    if not set(base) & set(cur):
+        notes.append("no comparable rows between baseline and current")
+    return regressions, notes
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 2:
+        print("usage: python -m benchmarks.perf_guard "
+              "baseline.json current.json", file=sys.stderr)
+        return 2
+    base_path, cur_path = argv
+    try:
+        with open(base_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        # missing/unreadable baseline is NOT a failure: the first main run
+        # after this lands has nothing to compare against
+        print(f"perf_guard: no usable baseline ({e}); passing")
+        return 0
+    with open(cur_path) as f:
+        current = json.load(f)
+    regressions, notes = compare(baseline, current)
+    for line in notes:
+        print(f"perf_guard: {line}")
+    if regressions:
+        print(f"perf_guard: FAIL — >{MAX_RATIO}x smoke-TTFT regression:")
+        for line in regressions:
+            print(f"perf_guard:   {line}")
+        return 1
+    print("perf_guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -31,6 +31,7 @@ MODULES = [
     "fig19_speculative",
     "fig_tiered_cache",
     "fig_replica_routing",
+    "fig_frontdoor",
     "tab4_sched_time",
     "throughput_batching",
     "tpot_topk",

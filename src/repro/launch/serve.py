@@ -15,6 +15,20 @@ for A/B sweeps).  Routing never changes computation — a request's greedy
 tokens are a pure function of (docs, question) — so ``--check-tokens``
 stays bit-identical to the single sequential engine at any replica count.
 
+``--frontdoor`` puts the front-door request layer ahead of the router
+(serving/frontdoor.py): a query-level cache (exact token-hash + cosine
+similarity hits, TTL + LRU bounded), per-tenant SLO-aware admission
+(degrade top-k, then shed), and an optional fleet autoscaler
+(``--autoscale``) that grows/shrinks the router's active set within
+[--autoscale-min, --replicas], warming joining replicas from their disk
+tier.  ``--tenants N`` swaps the workload for the multi-tenant traffic
+model (retrieval/traffic.py: canonical query pools, per-tenant Zipf +
+SLOs, diurnal + Markov-modulated burst arrivals).  With --frontdoor,
+``--check-tokens`` compares the front-door *misses* (with any top-k
+degradation applied identically to both engines); hits are served from
+cache and shed requests never execute, so both are excluded by
+construction.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --requests 12 --docs 50 --top-k 2 [--policy lru] [--no-reorder] \
         [--sequential] [--check-tokens] \
@@ -37,8 +51,11 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.traffic import make_default_workload
 from repro.retrieval.vectordb import IVFIndex
 from repro.serving.engine import RAGServer
+from repro.serving.frontdoor import (TenantSLO, attach_answers,
+                                     frontdoor_partition, make_frontdoor)
 from repro.serving.metrics import FleetMetrics
 from repro.serving.router import (ROUTING_POLICIES, ReplicaRouter,
                                   partition_requests)
@@ -105,6 +122,66 @@ def build_parser() -> argparse.ArgumentParser:
                          "modes; the sequential engine is always dense")
     ap.add_argument("--rate", type=float, default=100.0,
                     help="Poisson arrival rate (req/s)")
+    # workload shape (single- and multi-tenant)
+    ap.add_argument("--zipf-s", type=float, default=1.2,
+                    help="Zipf doc-popularity skew of the workload")
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="fraction of popularity ranks reshuffled per "
+                         "workload phase (non-stationary traffic; 0 = "
+                         "stationary)")
+    ap.add_argument("--n-phases", type=int, default=8,
+                    help="workload phases for --drift")
+    ap.add_argument("--output-len-mean", type=int, default=1,
+                    help="mean decode length (1 = MMLU-like; ~6 = "
+                         "NaturalQuestions-like)")
+    # multi-tenant traffic model (retrieval/traffic.py)
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="generate the workload from N tenants with "
+                         "per-tenant Zipf skew, canonical query pools "
+                         "(repeats -> front-door hits) and SLOs "
+                         "(0 = single-tenant make_workload)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=500.0,
+                    help="base per-tenant TTFT SLO target (tenant i gets "
+                         "base * (1 + 0.5 i)); also the default SLO for "
+                         "single-tenant --frontdoor runs")
+    ap.add_argument("--tenant-queries", type=int, default=16,
+                    help="canonical query pool size per tenant (smaller = "
+                         "more repeats = higher front-door hit rate)")
+    ap.add_argument("--diurnal-amplitude", type=float, default=0.0,
+                    help="sinusoidal arrival-rate modulation depth (0..1)")
+    ap.add_argument("--burst-rate-mult", type=float, default=1.0,
+                    help="Markov-modulated burst-state rate multiplier "
+                         "(1 = bursts off)")
+    # front-door request layer (serving/frontdoor.py)
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="serve through the front-door layer: query-level "
+                         "cache (exact + similarity) -> per-tenant SLO "
+                         "admission -> autoscaler -> replica router; "
+                         "cache hits never reach an engine")
+    ap.add_argument("--frontdoor-ttl", type=float, default=60.0,
+                    help="query-cache TTL in seconds (entries expire TTL "
+                         "after insertion regardless of use)")
+    ap.add_argument("--frontdoor-sim-threshold", type=float, default=0.98,
+                    help="cosine threshold for similarity hits against "
+                         "cached query vectors (>= 1.0 disables the "
+                         "similarity probe)")
+    ap.add_argument("--frontdoor-capacity", type=int, default=512,
+                    help="query-cache LRU capacity bound (entries)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the fleet autoscaler: replicas in "
+                         "[--autoscale-min, --replicas] against backlog "
+                         "signals; scale-ups warm the joining replica's "
+                         "tree from its disk tier")
+    ap.add_argument("--autoscale-min", type=int, default=1,
+                    help="autoscaler floor (active replicas never below)")
+    ap.add_argument("--scale-up-backlog", type=float, default=8.0,
+                    help="backlog per active replica above which the "
+                         "fleet grows")
+    ap.add_argument("--scale-down-backlog", type=float, default=2.0,
+                    help="backlog per active replica below which the "
+                         "fleet shrinks")
+    ap.add_argument("--autoscale-cooldown", type=float, default=2.0,
+                    help="seconds between autoscale events")
     ap.add_argument("--search-scale", type=float, default=1.0,
                     help="scale staged-search stage durations (emulate "
                          "paper-scale 78-446 ms searches on a tiny corpus)")
@@ -117,16 +194,31 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def make_setup(args):
+    """Build (cfg, params, corpus, idx, workload, tenants).  ``tenants`` is
+    the TenantSpec list when --tenants > 0 (multi-tenant traffic model),
+    else None (single-tenant stationary make_workload)."""
     cfg = get_reduced(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     corpus = make_corpus(args.docs, mean_doc_tokens=args.doc_tokens,
                          vocab=cfg.vocab_size, seed=args.seed)
     idx = IVFIndex(corpus.doc_vectors, n_clusters=min(16, args.docs),
                    nprobe=8)
+    if args.tenants > 0:
+        tenants, wl = make_default_workload(
+            corpus, n_tenants=args.tenants, n_requests=args.requests,
+            rate=args.rate, slo_ttft_ms=args.slo_ttft_ms,
+            zipf_s=args.zipf_s, n_queries=args.tenant_queries,
+            seed=args.seed + 1, drift=args.drift, n_phases=args.n_phases,
+            diurnal_amplitude=args.diurnal_amplitude,
+            burst_rate_mult=args.burst_rate_mult, vocab=cfg.vocab_size,
+            question_tokens=8, output_len_mean=args.output_len_mean)
+        return cfg, params, corpus, idx, wl, tenants
     wl = make_workload(corpus, n_requests=args.requests, rate=args.rate,
                        question_tokens=8, vocab=cfg.vocab_size,
-                       zipf_s=1.2, seed=args.seed + 1)
-    return cfg, params, corpus, idx, wl
+                       zipf_s=args.zipf_s, seed=args.seed + 1,
+                       drift=args.drift, n_phases=args.n_phases,
+                       output_len_mean=args.output_len_mean)
+    return cfg, params, corpus, idx, wl, None
 
 
 def tier_hit_line(tree) -> str:
@@ -165,9 +257,8 @@ def serve_sequential(cfg, params, corpus, idx, wl, args):
     return results
 
 
-def serve_continuous(cfg, params, corpus, idx, wl, args):
-    n = max(1, args.replicas)
-    rts = [ContinuousRuntime(
+def make_runtimes(cfg, params, corpus, idx, args, n):
+    return [ContinuousRuntime(
         cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
         gpu_cache_bytes=args.gpu_cache_bytes,
         host_cache_bytes=args.host_cache_bytes,
@@ -179,6 +270,11 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
         prefill_chunk=args.prefill_chunk,
         max_prefill_tokens=args.max_prefill_tokens,
         search_time_scale=args.search_scale) for _ in range(n)]
+
+
+def serve_continuous(cfg, params, corpus, idx, wl, args):
+    n = max(1, args.replicas)
+    rts = make_runtimes(cfg, params, corpus, idx, args, n)
     router = ReplicaRouter(rts, policy=args.routing,
                            max_queue_skew=args.max_queue_skew)
     # partition the trace in arrival order by the request's retrieved docs
@@ -224,9 +320,77 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
     return results
 
 
+def build_frontdoor(args, tenants):
+    """Assemble the FrontDoor policy stack from CLI flags.  The SAME
+    constructor path the simulator benchmarks use (make_frontdoor), so
+    every driver assembles the identical policy objects."""
+    slos = {}
+    if tenants:
+        slos = {t.name: TenantSLO(ttft_target=t.slo_ttft_ms / 1e3,
+                                  min_top_k=t.min_top_k) for t in tenants}
+    n = max(1, args.replicas)
+    return make_frontdoor(
+        capacity=args.frontdoor_capacity, ttl=args.frontdoor_ttl,
+        sim_threshold=args.frontdoor_sim_threshold, slos=slos,
+        default_slo_ttft=args.slo_ttft_ms / 1e3, top_k=args.top_k,
+        min_replicas=min(max(1, args.autoscale_min), n), max_replicas=n,
+        autoscale=args.autoscale,
+        scale_up_backlog=args.scale_up_backlog,
+        scale_down_backlog=args.scale_down_backlog,
+        cooldown=args.autoscale_cooldown)
+
+
+def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args):
+    """Serve through front door -> router -> N continuous runtimes.
+
+    Returns (miss_results, part): engine results for admitted misses (the
+    --check-tokens comparison set; hits are served from cache and shed
+    requests never execute, so both are excluded by construction)."""
+    n = max(1, args.replicas)
+    rts = make_runtimes(cfg, params, corpus, idx, args, n)
+    router = ReplicaRouter(rts, policy=args.routing,
+                           max_queue_skew=args.max_queue_skew)
+    fd = build_frontdoor(args, tenants)
+    part = frontdoor_partition(
+        fd, router, wl,
+        docs_of=lambda r: idx.search(r.query_vec,
+                                     r.top_k if r.top_k > 0 else args.top_k),
+        doc_tokens_of=lambda docs: [int(corpus.doc_lengths[d])
+                                    for d in docs],
+        context_of=lambda r, docs, toks: sum(toks) + len(r.question_tokens),
+        window=2 * args.max_batch * n)
+    t0 = time.time()
+    results = []
+    for rt, share in zip(rts, part.shares):
+        if share:
+            results.extend(rt.serve(share,
+                                    max_new_tokens=args.max_new_tokens))
+    wall = time.time() - t0
+    results.sort(key=lambda r: r.req_id)
+    # answers only exist after serving: fill the cache entries (hits share
+    # the entry object, so the cached answer reaches them too)
+    attach_answers(part, {r.req_id: r.tokens for r in results})
+    label = f"frontdoor x{n} ({args.routing})"
+    print(f"\n[{label}] {len(wl)} requests -> {len(part.hits)} cache hits, "
+          f"{len(part.shed)} shed, {len(results)} engine-served in "
+          f"{wall:.1f}s wall (incl. jit compiles)")
+    for r, dec in part.hits:
+        src = dec.entry.answer if dec.entry is not None else []
+        print(f"{r.req_id:>4} {dec.kind:<11} <- req {dec.entry.source_req_id}"
+              f"  tokens {src}")
+    fleet = FleetMetrics(router.stats(), fd.stats())
+    for i, rt in enumerate(rts):
+        fleet.add_replica(f"replica{i}", rt.metrics)
+    print(fleet.format_report())
+    if part.warmed:
+        for i, b in sorted(part.warmed.items()):
+            print(f"scale-up warmed replica{i}: {b} B from disk tier")
+    return results, part
+
+
 def main() -> None:
     args = build_parser().parse_args()
-    cfg, params, corpus, idx, wl = make_setup(args)
+    cfg, params, corpus, idx, wl, tenants = make_setup(args)
     print(f"model={cfg.name} family={cfg.family} layers={cfg.n_layers} "
           f"d_model={cfg.d_model}")
 
@@ -239,6 +403,30 @@ def main() -> None:
     if recurrent and args.check_tokens:
         print("note: --check-tokens unavailable for recurrent families "
               "(no continuous engine to compare against); NOT checked")
+    if args.frontdoor and (recurrent or args.sequential):
+        print("note: --frontdoor requires the continuous engine; ignored")
+    if args.frontdoor and not recurrent and not args.sequential:
+        miss_results, part = serve_frontdoor(cfg, params, corpus, idx, wl,
+                                             tenants, args)
+        if args.check_tokens:
+            # compare ONLY admitted misses (the requests an engine actually
+            # served, with the front door's top_k rewrites applied); hits
+            # are answered from cache and shed requests never execute
+            seq = serve_sequential(cfg, params, corpus, idx,
+                                   list(part.misses), args)
+            seq_by_id = {r.req_id: r for r in seq}
+            mismatches = [
+                (a.req_id, a.tokens, seq_by_id[a.req_id].tokens)
+                for a in miss_results
+                if list(a.tokens) != list(seq_by_id[a.req_id].tokens)
+            ]
+            if mismatches:
+                raise SystemExit(f"token mismatch: {mismatches}")
+            print(f"\ntoken check: all {len(miss_results)} front-door miss "
+                  f"requests identical (continuous == sequential; "
+                  f"{len(part.hits)} hits + {len(part.shed)} shed excluded "
+                  f"by construction)")
+        return
     if args.check_tokens and not recurrent:
         cont = serve_continuous(cfg, params, corpus, idx, wl, args)
         seq = serve_sequential(cfg, params, corpus, idx, wl, args)

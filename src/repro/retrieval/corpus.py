@@ -28,6 +28,13 @@ class Request:
     question_tokens: np.ndarray
     target_doc: int
     output_len: int
+    # multi-tenant traffic model (retrieval/traffic.py); engines ignore these
+    tenant: str = ""               # tenant name ("" = single-tenant workload)
+    query_id: int = -1             # canonical query id (repeats share one id)
+    top_k: int = 0                 # per-request retrieval depth override
+    #                                (0 = engine default; the front door's
+    #                                SLO admission degrades requests by
+    #                                lowering this, serving/frontdoor.py)
 
 
 def make_corpus(

@@ -166,7 +166,7 @@ class RAGServer:
               max_new_tokens: int = 4) -> List[ServeResult]:
         # cache-aware reordering over the (logical) arrival queue
         for r in requests:
-            docs = tuple(self.index.search(r.query_vec, self.top_k))
+            docs = tuple(self.index.search(r.query_vec, self._top_k_of(r)))
             hit = self.tree.match_prefix(docs)
             cached = sum(n.n_tokens for n in hit)
             total = sum(int(self.corpus.doc_lengths[d]) for d in docs) \
@@ -182,6 +182,12 @@ class RAGServer:
         self.results.extend(out)
         return out
 
+    def _top_k_of(self, r: Request) -> int:
+        """Per-request retrieval depth: Request.top_k > 0 overrides (the
+        front door's SLO admission degrades by lowering it; both engines
+        honor the same override so miss tokens stay bit-identical)."""
+        return min(r.top_k, self.top_k) if r.top_k > 0 else self.top_k
+
     def _refresh_lens(self, item):
         r, docs = item
         hit = self.tree.match_prefix(docs)
@@ -195,7 +201,7 @@ class RAGServer:
         # 1. staged retrieval + speculative-pipelining decisions (logical)
         t0 = time.perf_counter()
         spec = SpecState(r.req_id)
-        for stage in self.index.staged_search(r.query_vec, self.top_k):
+        for stage in self.index.staged_search(r.query_vec, self._top_k_of(r)):
             self.spec_ctl.on_stage(spec, tuple(stage.topk), 0,
                                    is_final=stage.is_final)
         search_time = time.perf_counter() - t0

@@ -244,9 +244,13 @@ class FleetMetrics:
     replica's completed timelines so the cross-replica TTFT/TPOT
     percentiles are exact."""
 
-    def __init__(self, router_stats: Dict[str, object] | None = None):
+    def __init__(self, router_stats: Dict[str, object] | None = None,
+                 frontdoor_stats: Dict[str, object] | None = None):
         self.replicas: List[Tuple[str, ServingMetrics]] = []
         self.router_stats: Dict[str, object] = router_stats or {}
+        # serving/frontdoor.py FrontDoor.stats(): query-cache hit rates,
+        # per-tenant SLO attainment, shed counts, autoscale events
+        self.frontdoor_stats: Dict[str, object] = frontdoor_stats or {}
 
     def add_replica(self, name: str, metrics: ServingMetrics) -> None:
         self.replicas.append((name, metrics))
@@ -275,6 +279,7 @@ class FleetMetrics:
             "tier_hit_tokens": tiers,
             "per_replica": per_replica,
             "routing": dict(self.router_stats),
+            "frontdoor": dict(self.frontdoor_stats),
         }
 
     def format_report(self) -> str:
@@ -309,4 +314,34 @@ class FleetMetrics:
                 f"{r['tier_hit_tokens']['disk']}  "
                 f"shared {r['blocks_shared']}  "
                 f"preempt {r['preemptions']}")
+        fd = s["frontdoor"]
+        if fd:
+            cache = fd.get("cache", {})
+            lines.append(
+                f"front door              : hit rate {fd.get('hit_rate', 0.0):.2%} "
+                f"(exact {cache.get('hits_exact', 0)} / "
+                f"similar {cache.get('hits_similar', 0)} / "
+                f"miss {cache.get('misses', 0)}), "
+                f"shed {fd.get('shed_total', 0)}, "
+                f"degraded {fd.get('degraded', 0)}, "
+                f"cache {cache.get('size', 0)}/{cache.get('capacity', 0)} "
+                f"(expired {cache.get('expired', 0)}, "
+                f"evicted {cache.get('evicted', 0)})")
+            targets = fd.get("slo_targets_ms", {})
+            for tenant, att in sorted(fd.get("slo_attainment", {}).items()):
+                tgt = targets.get(tenant)
+                tgt_s = f" (target {tgt:.0f}ms)" if tgt is not None else ""
+                lines.append(
+                    f"  SLO {tenant or '<default>':<12} "
+                    f"attained {att['attained']}/{att['completed']} "
+                    f"= {att['fraction']:.2%}{tgt_s}")
+            scale = fd.get("autoscale")
+            if scale:
+                lines.append(
+                    f"autoscale               : active {scale['active']} "
+                    f"in [{scale['min_replicas']}, {scale['max_replicas']}] "
+                    f"(seen {scale['min_seen']}..{scale['max_seen']}, "
+                    f"{len(scale['events'])} events)")
+                for t, active, reason in scale["events"]:
+                    lines.append(f"  t={t:8.3f}s -> {active} ({reason})")
         return "\n".join(lines)

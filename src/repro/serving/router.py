@@ -118,6 +118,11 @@ class ReplicaRouter:
         self.max_queue_skew = max_queue_skew
         self.max_shadow_paths = max_shadow_paths
         n = len(self.replicas)
+        # ACTIVE set: the front-door autoscaler (serving/frontdoor.py) may
+        # restrict routing to replicas[:active]; inactive replicas keep
+        # their trees/shadow state warm and still drain in-flight work, but
+        # receive no new dispatches until reactivated.
+        self.active = n
         self.depth = [0] * n           # in-flight (routed - completed)
         self.routed = [0] * n          # total dispatched per replica
         self.kind_counts: Dict[str, int] = {}
@@ -134,8 +139,18 @@ class ReplicaRouter:
     def __len__(self) -> int:
         return len(self.replicas)
 
+    def set_active(self, n: int) -> None:
+        """Restrict routing to ``replicas[:n]`` (autoscaler hook).  Shrinking
+        never touches a replica's state — its tree stays warm for the next
+        scale-up and its in-flight requests drain normally."""
+        if not 1 <= n <= len(self.replicas):
+            raise ValueError(
+                f"active count {n} outside [1, {len(self.replicas)}]")
+        self.active = n
+
     def skew(self) -> int:
-        return max(self.depth) - min(self.depth)
+        d = self.depth[:self.active]
+        return max(d) - min(d)
 
     @property
     def escaped(self) -> int:
@@ -144,6 +159,7 @@ class ReplicaRouter:
     def stats(self) -> Dict[str, object]:
         return {
             "policy": self.policy,
+            "active": self.active,
             "routed": list(self.routed),
             "depth": list(self.depth),
             "kind_counts": dict(self.kind_counts),
@@ -195,7 +211,7 @@ class ReplicaRouter:
             node = child
 
     def _least_loaded(self) -> int:
-        return min(range(len(self.replicas)), key=lambda i: (self.depth[i], i))
+        return min(range(self.active), key=lambda i: (self.depth[i], i))
 
     # ---- the decision -----------------------------------------------------
 
@@ -224,9 +240,10 @@ class ReplicaRouter:
         # been replicated by an earlier escape, later escapes ride the
         # existing copy instead of paying a third cold prefill.
         if self.policy == AFFINITY and docs:
-            floor = min(self.depth)
+            floor = min(self.depth[:self.active])
             if self.depth[chosen] + 1 - floor > self.max_queue_skew:
-                cands = [i for i, d in enumerate(self.depth) if d == floor]
+                cands = [i for i in range(self.active)
+                         if self.depth[i] == floor]
                 chosen = max(cands,
                              key=lambda i: (self._overlap(i, docs,
                                                           doc_tokens), -i))
@@ -235,7 +252,7 @@ class ReplicaRouter:
         # admission consult: chosen first, then the others least-loaded
         # first; a replica without an admission attribute is unbounded
         order = [chosen] + sorted(
-            (i for i in range(len(self.replicas)) if i != chosen),
+            (i for i in range(self.active) if i != chosen),
             key=lambda i: (self.depth[i], i))
         for i in order:
             if self._admissible(i, docs, context_tokens):
@@ -251,7 +268,7 @@ class ReplicaRouter:
 
     def _prefer(self, docs: Tuple[int, ...],
                 doc_tokens: Sequence[int]) -> Tuple[int, str, int]:
-        n = len(self.replicas)
+        n = self.active
         if self.policy == ROUND_ROBIN:
             i = self._rr_next % n
             self._rr_next += 1
@@ -299,8 +316,9 @@ class ReplicaRouter:
         # stays within the bound while requests only arrive; a completion
         # draining the floor under an old peak can exceed it transiently,
         # which no admission-time rule can prevent.
-        self.max_skew_observed = max(self.max_skew_observed,
-                                     self.depth[i] - min(self.depth))
+        self.max_skew_observed = max(
+            self.max_skew_observed,
+            self.depth[i] - min(self.depth[:self.active]))
         if docs:
             self._register(i, docs)
         return RouteDecision(index=i, replica=self.replicas[i], kind=kind,

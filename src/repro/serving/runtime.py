@@ -409,7 +409,13 @@ class ContinuousRuntime:
         # materialize stages, measuring the real scan cost of each stage;
         # the per-request search lane advances by max(measured, analytic)
         t = self.now
-        it = iter(self.index.staged_search(r.query_vec, self.top_k))
+        # per-request top_k override (Request.top_k > 0): the front door's
+        # SLO admission degrades requests by lowering retrieval depth; both
+        # engines honor it so degraded misses stay bit-identical under
+        # --check-tokens.  Degradation only ever LOWERS top_k, so the
+        # serve()-time max_ctx sizing (self.top_k) stays an upper bound.
+        k = min(r.top_k, self.top_k) if r.top_k > 0 else self.top_k
+        it = iter(self.index.staged_search(r.query_vec, k))
         while True:
             t0 = time.perf_counter()
             try:

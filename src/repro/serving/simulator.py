@@ -248,8 +248,12 @@ class RAGSimulator:
         st = _ReqState(r=r, spec=SpecState(r.req_id),
                        remaining_out=r.output_len, search_start=self.now)
         self._all_states.append(st)
+        # per-request top_k override (Request.top_k > 0): the front door's
+        # SLO admission degrades by lowering retrieval depth; the real
+        # engines honor the same override, so miss tokens stay identical
+        k = min(r.top_k, self.cfg.top_k) if r.top_k > 0 else self.cfg.top_k
         st.stages = list(self.index.staged_search(
-            r.query_vec, self.cfg.top_k, self.cfg.search_fraction))
+            r.query_vec, k, self.cfg.search_fraction))
         t = self.now
         for stage in st.stages:
             t += stage.seconds
@@ -624,3 +628,78 @@ def simulate_replicas(cfg: SimConfig, corpus: Corpus, index,
         per.append(sim.run())
     return FleetSimResult(metrics=merge_sim_metrics(per), per_replica=per,
                           router_stats=router.stats())
+
+
+@dataclasses.dataclass
+class FrontDoorSimResult:
+    metrics: SimMetrics            # pooled, INCLUDING front-door hits (each
+    #                                charged FrontDoor.LOOKUP_SECONDS TTFT)
+    miss_metrics: SimMetrics       # engine-served misses only
+    per_replica: List[SimMetrics]
+    router_stats: Dict[str, object]
+    frontdoor_stats: Dict[str, object]
+    partition: object              # frontdoor.FrontDoorPartition
+
+
+def simulate_frontdoor(cfg: SimConfig, corpus: Corpus, index,
+                       requests: Sequence[Request], frontdoor, *,
+                       n_replicas: int = 1, routing: str = AFFINITY,
+                       max_queue_skew: int = 4,
+                       profiler: Optional[CostProfiler] = None
+                       ) -> FrontDoorSimResult:
+    """Simulate the full front-door stack: query cache -> SLO admission ->
+    autoscaler -> ``ReplicaRouter`` -> N ``RAGSimulator`` replicas.
+
+    ``frontdoor`` is a ``serving.frontdoor.FrontDoor`` — the SAME policy
+    object ``launch/serve.py --frontdoor`` drives over real runtimes,
+    walked through the SAME ``frontdoor_partition`` trace walk, so
+    front-door policy cannot drift between simulation and reality
+    (the PR 1/PR 4 shared-policy pattern).
+
+    Cache hits never reach a replica; they are charged the front door's
+    analytic lookup cost as TTFT and pooled into ``metrics`` so
+    "front door on vs off" comparisons are honest about what the cache
+    absorbed.  Shed requests are dropped (counted in frontdoor_stats).
+    """
+    from repro.serving.frontdoor import frontdoor_partition
+
+    sims = [RAGSimulator(cfg, corpus, index, [], profiler=profiler)
+            for _ in range(n_replicas)]
+    router = ReplicaRouter(sims, policy=routing,
+                           max_queue_skew=max_queue_skew)
+
+    def _k(r):
+        return min(r.top_k, cfg.top_k) if r.top_k > 0 else cfg.top_k
+
+    part = frontdoor_partition(
+        frontdoor, router, requests,
+        docs_of=lambda r: index.search(r.query_vec, _k(r)),
+        doc_tokens_of=lambda docs: [int(corpus.doc_lengths[d])
+                                    for d in docs],
+        context_of=lambda r, docs, toks: (sum(toks)
+                                          + len(r.question_tokens)
+                                          + cfg.system_prompt_tokens),
+        window=2 * cfg.max_batch * n_replicas)
+    per = []
+    for sim, share in zip(sims, part.shares):
+        sim.requests = list(share)
+        per.append(sim.run())
+    miss = merge_sim_metrics(per)
+    # pool the hits back in at the analytic lookup cost
+    hit_ttfts = [frontdoor.LOOKUP_SECONDS] * len(part.hits)
+    ttfts = list(miss.ttfts) + hit_ttfts
+    ttfts_a = np.asarray(ttfts) if ttfts else np.asarray([0.0])
+    completed = miss.completed + len(part.hits)
+    pooled = dataclasses.replace(
+        miss,
+        avg_ttft=float(ttfts_a.mean()),
+        p50_ttft=float(np.percentile(ttfts_a, 50)),
+        p99_ttft=float(np.percentile(ttfts_a, 99)),
+        completed=completed,
+        throughput_rps=(completed / miss.duration
+                        if miss.duration > 0 else 0.0),
+        ttfts=list(map(float, ttfts)))
+    return FrontDoorSimResult(metrics=pooled, miss_metrics=miss,
+                              per_replica=per, router_stats=router.stats(),
+                              frontdoor_stats=frontdoor.stats(),
+                              partition=part)

@@ -1,0 +1,520 @@
+"""Front-door request layer: query-cache TTL/similarity/LRU contracts
+(hypothesis-verified), SLO admission, autoscaler bounds, the shared
+``frontdoor_partition`` trace walk, and the simulator e2e.
+
+Contracts (serving/frontdoor.py):
+  * an expired entry is NEVER served (TTL anchors at insertion; hits
+    refresh LRU recency, never freshness);
+  * similarity hits fire only at/above the cosine threshold;
+  * the LRU capacity bound is never exceeded;
+  * the autoscaler's active count stays within [min, max] under bursts;
+  * simulator and real driver consume the same policy objects through the
+    same partition walk (PR 1/PR 4 shared-policy pattern).
+"""
+import numpy as np
+import pytest
+
+from repro.retrieval.corpus import Request, make_corpus
+from repro.retrieval.traffic import default_tenants, make_default_workload
+from repro.serving.frontdoor import (ADMIT, DEGRADE, HIT_EXACT, HIT_SIMILAR,
+                                     MISS, SHED, AutoscaleConfig,
+                                     FleetAutoscaler, FrontDoor, QueryCache,
+                                     SloAdmission, TenantSLO,
+                                     frontdoor_partition, make_frontdoor,
+                                     query_key, warm_from_disk)
+from repro.serving.metrics import FleetMetrics, ServingMetrics
+from repro.serving.router import ReplicaRouter
+
+
+def _vec(seed, d=8):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=d).astype(np.float32)
+    return v / np.linalg.norm(v)
+
+
+def _toks(seed, n=4):
+    return np.random.default_rng(seed).integers(0, 1000, n).astype(np.int32)
+
+
+def _req(i, *, arrival=0.0, seed=None, tenant="", out=1):
+    s = i if seed is None else seed
+    return Request(req_id=i, arrival=arrival, query_vec=_vec(s),
+                   question_tokens=_toks(s), target_doc=0, output_len=out,
+                   tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# QueryCache: deterministic unit tests (run even without hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_query_key_is_deterministic_and_order_sensitive():
+    assert query_key([1, 2]) == query_key(np.asarray([1, 2]))
+    assert query_key([1, 2]) != query_key([2, 1])
+    assert query_key([]) == 0xcbf29ce484222325
+
+
+def test_exact_hit_and_miss():
+    c = QueryCache(capacity=4, ttl=10.0, sim_threshold=1.0)
+    v, t = _vec(0), _toks(0)
+    assert c.lookup(v, t, 0.0) == (MISS, None)
+    c.insert(v, t, docs=(3, 1), answer=[7, 8], source_req_id=0, now=0.0)
+    kind, e = c.lookup(v, t, 1.0)
+    assert kind == HIT_EXACT
+    assert e.docs == (3, 1) and e.answer == [7, 8] and e.source_req_id == 0
+    # different tokens, same vector direction: exact misses (threshold 1.0
+    # disables the similarity probe entirely)
+    assert c.lookup(v, _toks(1), 1.0) == (MISS, None)
+    assert c.stats()["hits_exact"] == 1 and c.stats()["misses"] == 2
+
+
+def test_similarity_hit_at_threshold_only():
+    c = QueryCache(capacity=4, ttl=10.0, sim_threshold=0.95)
+    v = _vec(0)
+    c.insert(v, _toks(0), docs=(1,), answer=[5], source_req_id=0, now=0.0)
+    # near-duplicate: same direction, tiny perturbation, different tokens
+    near = v + 0.01 * _vec(1)
+    kind, e = c.lookup(near, _toks(1), 1.0)
+    assert kind == HIT_SIMILAR and e.docs == (1,)
+    # orthogonal-ish probe: below threshold -> miss
+    far = _vec(2) - float(np.dot(_vec(2), v)) * v
+    assert c.lookup(far, _toks(2), 1.0)[0] == MISS
+
+
+def test_ttl_expiry_never_serves_expired():
+    c = QueryCache(capacity=4, ttl=5.0, sim_threshold=0.9)
+    v, t = _vec(0), _toks(0)
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0)
+    assert c.lookup(v, t, 4.999)[0] == HIT_EXACT
+    # ... the hit did NOT refresh freshness: expiry still anchors at t=0
+    assert c.lookup(v, t, 5.0) == (MISS, None)
+    assert c.stats()["expired"] == 1 and len(c) == 0
+    # an expired entry is invisible to the similarity probe too
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=10.0)
+    assert c.lookup(v + 0.01 * _vec(1), _toks(1), 100.0) == (MISS, None)
+
+
+def test_reinsert_refreshes_freshness():
+    c = QueryCache(capacity=4, ttl=5.0, sim_threshold=1.0)
+    v, t = _vec(0), _toks(0)
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0)
+    c.insert(v, t, docs=(2,), answer=[9], source_req_id=7, now=4.0)
+    kind, e = c.lookup(v, t, 8.0)   # 8 < 4 + 5: alive, with the new payload
+    assert kind == HIT_EXACT and e.docs == (2,) and e.source_req_id == 7
+
+
+def test_lru_capacity_bound_evicts_least_recently_hit():
+    c = QueryCache(capacity=3, ttl=100.0, sim_threshold=1.0)
+    for i in range(3):
+        c.insert(_vec(i), _toks(i), (i,), [], i, now=0.0)
+    # touch entry 0 so it is most-recently used
+    assert c.lookup(_vec(0), _toks(0), 1.0)[0] == HIT_EXACT
+    c.insert(_vec(3), _toks(3), (3,), [], 3, now=1.0)
+    assert len(c) == 3 and c.stats()["evicted"] == 1
+    assert c.lookup(_vec(0), _toks(0), 2.0)[0] == HIT_EXACT   # survived
+    assert c.lookup(_vec(1), _toks(1), 2.0)[0] == MISS        # evicted
+
+
+def test_cache_rejects_bad_config():
+    with pytest.raises(ValueError):
+        QueryCache(capacity=0)
+    with pytest.raises(ValueError):
+        QueryCache(ttl=0.0)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission
+# ---------------------------------------------------------------------------
+
+def test_admission_admits_under_target():
+    adm = SloAdmission({"a": TenantSLO(ttft_target=1.0)}, top_k=4,
+                       init_service=0.01)
+    d = adm.decide("a", backlog=0, active=1)
+    assert d.action == ADMIT and d.top_k == 4
+    assert adm.decisions[ADMIT] == 1
+
+
+def test_admission_degrades_then_sheds():
+    # service estimate 1s vs 0.5s target: over target but within the
+    # 2x shed band at the floor -> degrade to min_top_k
+    adm = SloAdmission({"a": TenantSLO(ttft_target=0.5, min_top_k=2)},
+                       top_k=4, init_service=1.0, shed_factor=2.0)
+    d = adm.decide("a", backlog=0, active=1)
+    assert d.action == DEGRADE and d.top_k == 2
+    # deep backlog: even the floor predicts > shed_factor x target -> shed
+    d2 = adm.decide("a", backlog=50, active=1)
+    assert d2.action == SHED and d2.top_k == 0
+    assert adm.decisions[DEGRADE] == 1 and adm.decisions[SHED] == 1
+
+
+def test_admission_unknown_tenant_uses_default_and_ewma_learns():
+    adm = SloAdmission({}, default=TenantSLO(ttft_target=0.2), top_k=2,
+                       init_service=1.0, ewma_alpha=0.5)
+    assert adm.decide("nobody", 0, 1).predicted_ttft == pytest.approx(1.0)
+    for _ in range(20):
+        adm.observe_ttft(0.01)
+    assert adm.decide("nobody", 0, 1).action == ADMIT
+
+
+def test_more_active_replicas_lower_prediction():
+    adm = SloAdmission({}, top_k=2, init_service=0.1)
+    assert adm.predicted_ttft(8, 4) < adm.predicted_ttft(8, 1)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_bounds_under_bursty_trace():
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                          scale_up_backlog=2.0, scale_down_backlog=0.5,
+                          cooldown=0.1)
+    sc = FleetAutoscaler(cfg)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for _ in range(500):
+        t += float(rng.exponential(0.05))
+        # Markov-ish bursts: deep backlog spikes then idle troughs
+        backlog = int(rng.choice([0, 1, 30], p=[0.4, 0.3, 0.3]))
+        n = sc.observe(t, backlog)
+        assert cfg.min_replicas <= n <= cfg.max_replicas
+    assert sc.min_seen >= 1 and sc.max_seen <= 3
+    assert sc.max_seen == 3 and sc.min_seen == 1     # both directions fired
+    assert sc.events                                 # ... and were recorded
+    kinds = {e.reason.split(":")[0] for e in sc.events}
+    assert kinds == {"up", "down"}
+
+
+def test_autoscaler_cooldown_spaces_events():
+    sc = FleetAutoscaler(AutoscaleConfig(min_replicas=1, max_replicas=4,
+                                         scale_up_backlog=1.0,
+                                         scale_down_backlog=0.5,
+                                         cooldown=10.0))
+    assert sc.observe(0.0, 100) == 2
+    assert sc.observe(5.0, 100) == 2      # inside cooldown: no change
+    assert sc.observe(10.1, 100) == 3
+    assert [e.active for e in sc.events] == [2, 3]
+
+
+def test_autoscale_config_validation():
+    with pytest.raises(ValueError):
+        AutoscaleConfig(min_replicas=2, max_replicas=1)
+    with pytest.raises(ValueError):
+        AutoscaleConfig(scale_up_backlog=1.0, scale_down_backlog=2.0)
+
+
+# ---------------------------------------------------------------------------
+# router active set
+# ---------------------------------------------------------------------------
+
+class _Bare:
+    pass
+
+
+def test_router_set_active_restricts_routing():
+    r = ReplicaRouter([_Bare(), _Bare(), _Bare()])
+    r.set_active(1)
+    for i in range(20):
+        assert r.route((i,), (1,)).index == 0
+    # a fresh router at full active set spreads distinct cold docs
+    r2 = ReplicaRouter([_Bare(), _Bare(), _Bare()])
+    assert {r2.route((i,), (1,)).index for i in range(30)} == {0, 1, 2}
+    with pytest.raises(ValueError):
+        r.set_active(0)
+    with pytest.raises(ValueError):
+        r.set_active(4)
+
+
+# ---------------------------------------------------------------------------
+# warm-from-disk
+# ---------------------------------------------------------------------------
+
+def test_warm_from_disk_stages_disk_nodes():
+    from repro.core.knowledge_tree import KnowledgeTree
+    tree = KnowledgeTree(100, 100, 100, bytes_per_token=1)
+    node, _ = tree.insert(tree.root, 1, 10, None)
+    tree.evict_gpu(100)     # GPU -> host
+    tree.evict_host(100)    # host -> disk
+    assert node.in_disk and not node.in_host and not node.in_gpu
+
+    class _Replica:
+        pass
+
+    rep = _Replica()
+    rep.tree = tree
+    staged = warm_from_disk(rep)
+    assert staged == 10      # node's bytes fetched disk -> host
+    assert node.in_host      # staged, ready for a host->GPU promote
+    # idempotent: nothing left disk-only to stage
+    assert warm_from_disk(rep) == 0
+    # a replica with no tree warms for free
+    assert warm_from_disk(_Bare()) == 0
+
+
+# ---------------------------------------------------------------------------
+# FrontDoor composition + the shared partition walk
+# ---------------------------------------------------------------------------
+
+def _mk_fd(**kw):
+    kw.setdefault("capacity", 32)
+    kw.setdefault("ttl", 1e9)
+    kw.setdefault("sim_threshold", 0.98)
+    kw.setdefault("top_k", 2)
+    kw.setdefault("init_service", 1e-6)
+    return make_frontdoor(**kw)
+
+
+def test_frontdoor_handle_flow_and_slo_attainment():
+    fd = _mk_fd(slos={"a": TenantSLO(ttft_target=0.5)})
+    r0 = _req(0, tenant="a")
+    d0 = fd.handle(r0, 0.0)
+    assert d0.kind == MISS and fd.backlog == 1
+    fd.note_complete(r0, docs=(1, 2), answer=[9], ttft=0.1, now=0.1)
+    assert fd.backlog == 0
+    # the repeat (same query payload) hits, with the original's answer
+    d1 = fd.handle(_req(1, seed=0, tenant="a"), 0.2)
+    assert d1.kind == HIT_EXACT and d1.entry.answer == [9]
+    att = fd.slo_attainment()
+    assert att["a"][0] == 2 and att["a"][1] == 2    # miss + hit both in SLO
+    s = fd.stats()
+    assert s["hit_rate"] == pytest.approx(0.5)
+    assert s["slo_attainment"]["a"]["fraction"] == 1.0
+
+
+def test_frontdoor_partition_hits_shed_and_misses():
+    # window=1: each miss completes (and populates the cache) as soon as
+    # the next miss dispatches, so the repeat of request 0 can hit
+    fd = _mk_fd(slos={"slow": TenantSLO(ttft_target=1e-9, min_top_k=1)},
+                default_slo_ttft=1e9, init_service=1.0)
+    router = ReplicaRouter([_Bare(), _Bare()])
+    reqs = [
+        _req(0, arrival=0.0, seed=0),
+        _req(1, arrival=1.0, seed=1),
+        _req(2, arrival=2.0, seed=0),              # repeat of 0 -> exact hit
+        _req(3, arrival=3.0, seed=3, tenant="slow"),   # impossible SLO
+    ]
+    part = frontdoor_partition(fd, router, reqs,
+                               docs_of=lambda r: (int(r.req_id) % 2,),
+                               window=1)
+    assert [r.req_id for r, _ in part.hits] == [2]
+    assert part.hits[0][1].kind == HIT_EXACT
+    assert [r.req_id for r in part.shed] == [3]
+    assert sorted(r.req_id for r in part.misses) == [0, 1]
+    assert sum(len(s) for s in part.shares) == 2
+    assert router.depth == [0, 0]                  # fully drained
+    assert fd.stats()["shed"] == {"slow": 1}
+
+
+def test_frontdoor_partition_degrades_top_k_via_request_rewrite():
+    # service estimate 1s vs 0.55s target: every request degrades to the
+    # floor (and none sheds: even at backlog 2 the floor predicts
+    # 3 * 1/3 = 1.0s <= shed_factor 2 x 0.55s), and the rewritten
+    # Request carries the lowered top_k
+    fd = _mk_fd(slos={"a": TenantSLO(ttft_target=0.55, min_top_k=1)},
+                top_k=3, init_service=1.0)
+    router = ReplicaRouter([_Bare()])
+    reqs = [_req(i, arrival=float(i), seed=i, tenant="a") for i in range(3)]
+    part = frontdoor_partition(fd, router, reqs,
+                               docs_of=lambda r: (0,), window=0)
+    assert part.misses and all(r.top_k == 1 for r in part.misses)
+    assert all(r.top_k == 0 for r in reqs)     # originals untouched
+    assert fd.degraded == 3
+
+
+def test_frontdoor_partition_autoscales_and_warms():
+    fd = _mk_fd(min_replicas=1, max_replicas=3, autoscale=True,
+                scale_up_backlog=1.0, scale_down_backlog=0.1,
+                cooldown=0.0, init_service=1e-6)
+    router = ReplicaRouter([_Bare(), _Bare(), _Bare()])
+    warmed_handles = []
+    # all-distinct queries arriving with zero drain (window=0): backlog
+    # climbs monotonically, forcing scale-ups
+    reqs = [_req(i, arrival=float(i) * 0.01, seed=i) for i in range(12)]
+    part = frontdoor_partition(
+        fd, router, reqs, docs_of=lambda r: (r.req_id,), window=0,
+        warm_replica=lambda rep: warmed_handles.append(rep) or 0)
+    assert fd.autoscaler.max_seen == 3
+    assert 1 <= fd.autoscaler.active <= 3
+    # replicas 1 and 2 joined the active set exactly once each
+    assert warmed_handles == [router.replicas[1], router.replicas[2]]
+    assert set(part.warmed) == {1, 2}
+    assert all(len(s) > 0 for s in part.shares)    # load actually spread
+
+
+# ---------------------------------------------------------------------------
+# simulator e2e: the same policy objects, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    from repro.retrieval.vectordb import IVFIndex
+    corpus = make_corpus(40, mean_doc_tokens=60, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=8, nprobe=8, seed=0)
+    tenants, wl = make_default_workload(corpus, n_tenants=2, n_requests=80,
+                                        rate=50.0, n_queries=6, seed=3)
+    return corpus, idx, tenants, wl
+
+
+def _sim_cfg():
+    from repro.core.profiler import A10G_MISTRAL_7B
+    from repro.serving.simulator import SimConfig
+    return SimConfig(profile=A10G_MISTRAL_7B, top_k=2,
+                     gpu_cache_bytes=2 * 2**30, host_cache_bytes=16 * 2**30)
+
+
+def test_simulate_frontdoor_on_beats_off(sim_setup):
+    from repro.serving.simulator import simulate_frontdoor, simulate_replicas
+    corpus, idx, tenants, wl = sim_setup
+    off = simulate_replicas(_sim_cfg(), corpus, idx, wl, n_replicas=2)
+    fd = _mk_fd(slos={t.name: TenantSLO(ttft_target=1e9) for t in tenants})
+    on = simulate_frontdoor(_sim_cfg(), corpus, idx, wl, fd, n_replicas=2)
+    assert not on.partition.shed
+    assert on.partition.hits                      # repeats actually hit
+    assert on.metrics.completed == len(wl)
+    assert on.metrics.avg_ttft < off.metrics.avg_ttft
+    # miss-only metrics exclude the hits
+    assert on.miss_metrics.completed == len(on.partition.misses)
+
+
+def test_simulate_frontdoor_autoscaler_stays_bounded(sim_setup):
+    from repro.serving.simulator import simulate_frontdoor
+    corpus, idx, tenants, wl = sim_setup
+    fd = _mk_fd(slos={t.name: TenantSLO(ttft_target=t.slo_ttft_ms / 1e3)
+                      for t in tenants},
+                min_replicas=1, max_replicas=3, autoscale=True,
+                scale_up_backlog=2.0, scale_down_backlog=0.5, cooldown=0.05,
+                init_service=0.05)
+    res = simulate_frontdoor(_sim_cfg(), corpus, idx, wl, fd, n_replicas=3)
+    scale = res.frontdoor_stats["autoscale"]
+    assert 1 <= scale["min_seen"] and scale["max_seen"] <= 3
+    assert scale["events"]
+
+
+def test_fleet_metrics_reports_frontdoor_and_slo(sim_setup):
+    from repro.serving.simulator import simulate_frontdoor
+    corpus, idx, tenants, wl = sim_setup
+    fd = _mk_fd(slos={t.name: TenantSLO(ttft_target=t.slo_ttft_ms / 1e3)
+                      for t in tenants})
+    simulate_frontdoor(_sim_cfg(), corpus, idx, wl, fd, n_replicas=2)
+    fleet = FleetMetrics(router_stats={}, frontdoor_stats=fd.stats())
+    fleet.add_replica("replica0", ServingMetrics())
+    rep = fleet.format_report()
+    assert "front door" in rep and "hit rate" in rep
+    for t in tenants:
+        assert f"SLO {t.name}" in rep             # per-tenant attainment
+    assert fleet.summary()["frontdoor"]["hit_rate"] > 0.0
+
+
+def test_shared_policy_objects_between_drivers():
+    """The real driver and the simulator import the SAME partition walk
+    and policy constructor — front-door behavior cannot drift (the PR 1
+    scheduler / PR 4 router shared-policy discipline)."""
+    pytest.importorskip("jax")
+    import repro.launch.serve as serve_mod
+    from repro.serving import frontdoor as fd_mod
+    from repro.serving import simulator as sim_mod
+    assert serve_mod.frontdoor_partition is fd_mod.frontdoor_partition
+    assert serve_mod.make_frontdoor is fd_mod.make_frontdoor
+    # simulate_frontdoor resolves the identical partition function
+    import inspect
+    src = inspect.getsource(sim_mod.simulate_frontdoor)
+    assert "frontdoor_partition(" in src
+    # ... and a FrontDoor built by the CLI path is drivable by the sim
+    args = serve_mod.build_parser().parse_args(
+        ["--frontdoor", "--slo-ttft-ms", "250"])
+    fd = serve_mod.build_frontdoor(args, default_tenants(2))
+    assert isinstance(fd, FrontDoor)
+    # per-tenant targets come from the TenantSpecs (tenant0: 500ms default,
+    # head tenants tighter); --slo-ttft-ms sets the unknown-tenant fallback
+    assert fd.admission.slo_of("tenant0").ttft_target == pytest.approx(0.5)
+    assert fd.admission.slo_of("stranger").ttft_target == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (CI installs hypothesis; local runs skip)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    # (key, insert-gap, lookup-gap) triples: time only moves forward
+    ops = st.lists(st.tuples(st.integers(0, 5),
+                             st.floats(0.0, 3.0, allow_nan=False),
+                             st.floats(0.0, 3.0, allow_nan=False)),
+                   min_size=1, max_size=40)
+
+    @settings(max_examples=100, deadline=None)
+    @given(trace=ops, ttl=st.floats(0.5, 4.0, allow_nan=False))
+    def test_expired_entries_never_served(trace, ttl):
+        """Whatever the interleaving of inserts and lookups, a served
+        entry is strictly younger than the TTL."""
+        c = QueryCache(capacity=64, ttl=ttl, sim_threshold=1.0)
+        created = {}
+        now = 0.0
+        for key, gap_i, gap_l in trace:
+            now += gap_i
+            c.insert(_vec(key), _toks(key), (key,), [], key, now=now)
+            created[key] = now
+            now += gap_l
+            probe = key % 3
+            kind, e = c.lookup(_vec(probe), _toks(probe), now)
+            if kind == HIT_EXACT:
+                assert now - created[probe] < ttl
+            elif probe in created:
+                # a miss on a known key is only legal past its TTL or
+                # after an LRU eviction (capacity 64 > trace: never here)
+                assert now - created[probe] >= ttl
+
+    @settings(max_examples=100, deadline=None)
+    @given(seeds=st.lists(st.integers(0, 50), min_size=1, max_size=16,
+                          unique=True),
+           probe_seed=st.integers(51, 99),
+           threshold=st.floats(0.2, 0.999, allow_nan=False))
+    def test_similarity_hits_only_at_or_above_threshold(seeds, probe_seed,
+                                                        threshold):
+        c = QueryCache(capacity=64, ttl=1e9, sim_threshold=threshold)
+        for s in seeds:
+            c.insert(_vec(s), _toks(s), (s,), [], s, now=0.0)
+        q = _vec(probe_seed)
+        kind, e = c.lookup(q, _toks(probe_seed), 1.0)
+        best = max(float(np.dot(_vec(s), q)) for s in seeds)
+        if kind == HIT_SIMILAR:
+            assert float(np.dot(e.vec, q)) >= threshold - 1e-6
+            assert float(np.dot(e.vec, q)) == pytest.approx(best, abs=1e-6)
+        else:
+            assert kind == MISS and best < threshold + 1e-6
+
+    @settings(max_examples=100, deadline=None)
+    @given(keys=st.lists(st.integers(0, 30), min_size=1, max_size=60),
+           capacity=st.integers(1, 8))
+    def test_lru_bound_never_exceeded(keys, capacity):
+        c = QueryCache(capacity=capacity, ttl=1e9, sim_threshold=1.0)
+        for i, k in enumerate(keys):
+            c.insert(_vec(k), _toks(k), (k,), [], i, now=float(i))
+            assert len(c) <= capacity
+        st_ = c.stats()
+        assert st_["size"] <= capacity
+        # conservation: every insert either lives, was evicted, or was an
+        # overwrite of a live key
+        assert st_["evicted"] <= len(keys)
+
+    backlogs = st.lists(st.integers(0, 50), min_size=1, max_size=200)
+
+    @settings(max_examples=100, deadline=None)
+    @given(trace=backlogs, lo=st.integers(1, 3), span=st.integers(0, 3),
+           up=st.floats(1.0, 8.0), down_frac=st.floats(0.1, 1.0))
+    def test_autoscaler_always_within_bounds(trace, lo, span, up,
+                                             down_frac):
+        cfg = AutoscaleConfig(min_replicas=lo, max_replicas=lo + span,
+                              scale_up_backlog=up,
+                              scale_down_backlog=up * down_frac,
+                              cooldown=0.0)
+        sc = FleetAutoscaler(cfg)
+        for i, b in enumerate(trace):
+            n = sc.observe(float(i), b)
+            assert lo <= n <= lo + span
+        assert lo <= sc.min_seen <= sc.max_seen <= lo + span

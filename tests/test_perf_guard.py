@@ -1,0 +1,115 @@
+"""CI perf-regression guard (benchmarks/perf_guard.py): tracked-row
+filtering, the >2x ratio gate, smoke-size mismatch skip, and the tolerant
+main() exit codes ci.yml relies on (missing baseline must PASS)."""
+import json
+
+from benchmarks.perf_guard import MAX_RATIO, MIN_BASELINE_US, compare, main
+
+
+def _doc(rows, smoke=True):
+    return {"smoke": smoke,
+            "rows": [{"name": n, "us_per_call": us} for n, us in rows]}
+
+
+def test_pass_when_within_ratio():
+    base = _doc([("fig_frontdoor/on", 1000.0), ("fig_replica/x", 500.0)])
+    cur = _doc([("fig_frontdoor/on", 1500.0), ("fig_replica/x", 900.0)])
+    regressions, notes = compare(base, cur)
+    assert not regressions
+    assert any("1.50x" in n for n in notes)
+
+
+def test_fail_on_regression_over_ratio():
+    base = _doc([("fig_frontdoor/on", 1000.0)])
+    cur = _doc([("fig_frontdoor/on", 1000.0 * MAX_RATIO * 1.1)])
+    regressions, _ = compare(base, cur)
+    assert len(regressions) == 1
+    assert "fig_frontdoor/on" in regressions[0]
+    # a speedup obviously passes
+    assert not compare(cur, base)[0]
+
+
+def test_untracked_error_and_total_rows_are_ignored():
+    base = _doc([("kernel_bench/decode", 100.0),    # untracked prefix
+                 ("fig_frontdoor/_total", 100.0),   # system row
+                 ("fig_frontdoor/ERROR", 100.0),    # error row
+                 ("fig13_overall", 200.0)])
+    cur = _doc([("kernel_bench/decode", 9900.0),
+                ("fig_frontdoor/_total", 9900.0),
+                ("fig_frontdoor/ERROR", 9900.0),
+                ("fig13_overall", 300.0)])
+    regressions, _ = compare(base, cur)
+    assert not regressions                 # only fig13_overall compared, ok
+
+
+def test_tiny_baselines_are_not_gated():
+    # near-zero denominators are fixed-overhead noise, never a regression
+    base = _doc([("fig_frontdoor/on", MIN_BASELINE_US / 2)])
+    cur = _doc([("fig_frontdoor/on", MIN_BASELINE_US * 50)])
+    assert not compare(base, cur)[0]
+
+
+def test_smoke_size_mismatch_skips_comparison():
+    base = _doc([("fig_frontdoor/on", 100.0)], smoke=False)
+    cur = _doc([("fig_frontdoor/on", 10000.0)], smoke=True)
+    regressions, notes = compare(base, cur)
+    assert not regressions
+    assert any("smoke flag differs" in n for n in notes)
+
+
+def test_new_and_removed_rows_are_notes_not_failures():
+    base = _doc([("fig_frontdoor/old", 1000.0)])
+    cur = _doc([("fig_frontdoor/new", 1000.0)])
+    regressions, notes = compare(base, cur)
+    assert not regressions
+    assert any("new rows" in n for n in notes)
+    assert any("no comparable rows" in n for n in notes)
+
+
+def test_malformed_us_values_are_skipped():
+    base = {"smoke": True, "rows": [
+        {"name": "fig_frontdoor/on", "us_per_call": "not-a-number"},
+        {"name": "fig_frontdoor/neg", "us_per_call": -5.0},
+        {"name": "fig_frontdoor/ok", "us_per_call": 1000.0}]}
+    cur = _doc([("fig_frontdoor/on", 1.0), ("fig_frontdoor/neg", 1.0),
+                ("fig_frontdoor/ok", 1100.0)])
+    regressions, _ = compare(base, cur)
+    assert not regressions
+
+
+# ---------------------------------------------------------------------------
+# main(): the exit-code contract ci.yml depends on
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_main_missing_baseline_passes(tmp_path, capsys):
+    cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
+    assert main([str(tmp_path / "absent.json"), cur]) == 0
+    assert "no usable baseline" in capsys.readouterr().out
+
+
+def test_main_corrupt_baseline_passes(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
+    assert main([str(bad), cur]) == 0
+
+
+def test_main_regression_fails(tmp_path, capsys):
+    base = _write(tmp_path, "base.json",
+                  _doc([("fig_frontdoor/on", 1000.0)]))
+    cur = _write(tmp_path, "cur.json",
+                 _doc([("fig_frontdoor/on", 5000.0)]))
+    assert main([base, cur]) == 1
+    assert "FAIL" in capsys.readouterr().out
+    # same files within ratio: exit 0
+    assert main([base, base]) == 0
+
+
+def test_main_usage_error():
+    assert main(["only-one-arg"]) == 2

@@ -61,3 +61,45 @@ def test_main_sequential_only(monkeypatch, capsys):
     out = _run_main(monkeypatch, capsys, ["--sequential"])
     assert "[sequential] served 4 requests" in out
     assert "[continuous]" not in out
+
+
+FRONTDOOR = ["--requests", "16", "--max-batch", "2", "--frontdoor",
+             "--tenants", "2", "--tenant-queries", "3"]
+
+
+def test_main_frontdoor_check_tokens_single_replica(monkeypatch, capsys):
+    """--frontdoor on repeat-heavy tenant traffic: the query cache absorbs
+    repeats (trace longer than the in-flight window, so originals complete
+    and populate the cache), and --check-tokens compares ONLY the admitted
+    misses against the sequential engine — bit-identical."""
+    out = _run_main(monkeypatch, capsys, FRONTDOOR + ["--check-tokens"])
+    assert "[frontdoor x1" in out
+    assert "hit_exact" in out                    # repeats actually hit
+    assert "front door" in out and "SLO tenant0" in out
+    assert "front-door miss requests identical" in out
+    assert "excluded by construction" in out
+
+
+def test_main_frontdoor_check_tokens_three_replicas(monkeypatch, capsys):
+    """--frontdoor --replicas 3: misses fan out across the fleet through
+    the affinity router and still match the single sequential engine."""
+    out = _run_main(monkeypatch, capsys,
+                    FRONTDOOR + ["--check-tokens", "--replicas", "3"])
+    assert "frontdoor x3 (affinity)" in out
+    assert "fleet: 3 replicas" in out
+    assert "front-door miss requests identical" in out
+
+
+def test_main_frontdoor_ignored_for_sequential(monkeypatch, capsys):
+    out = _run_main(monkeypatch, capsys, ["--frontdoor", "--sequential"])
+    assert "--frontdoor requires the continuous engine; ignored" in out
+    assert "[sequential] served 4 requests" in out
+
+
+def test_main_workload_knob_flags(monkeypatch, capsys):
+    """PR 6 satellite: drift/zipf/phase/output-length knobs are plumbed
+    through the CLI into make_workload."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--sequential", "--zipf-s", "1.5", "--drift", "0.3",
+                     "--n-phases", "4", "--output-len-mean", "2"])
+    assert "[sequential] served 4 requests" in out

@@ -74,3 +74,70 @@ def test_summary_aggregates():
     assert s["speculative_hits"] == 1
     assert s["doc_hit_rate"] == pytest.approx(0.5)
     assert "TTFT" in m.format_report()
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs: zero completed requests, all-idle replicas (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_zero_completed_requests_report():
+    """A run where nothing completed (all shed, or an empty trace) must
+    still summarize and render — the front-door driver prints a FleetMetrics
+    report even when the cache absorbed every request."""
+    m = ServingMetrics()
+    s = m.summary()
+    assert s["completed"] == 0
+    assert all(s["ttft"][k] == 0.0 for k in ("mean", "p50", "p90", "p99"))
+    assert s["doc_hit_rate"] == 0.0
+    rep = m.format_report()
+    assert "TTFT" in rep and "nan" not in rep
+    # an opened-but-never-finished timeline stays excluded, not crashing
+    m.timeline(0, 0.0)
+    assert m.summary()["completed"] == 0
+    assert "nan" not in m.format_report()
+
+
+def test_fleet_metrics_all_idle_replica():
+    from repro.serving.metrics import FleetMetrics
+    fleet = FleetMetrics(router_stats={"policy": "affinity"})
+    fleet.add_replica("replica0", ServingMetrics())   # never served anything
+    busy = ServingMetrics()
+    tl = busy.timeline(1, 0.0)
+    tl.first_token = 0.5
+    fleet.add_replica("replica1", busy)
+    s = fleet.summary()
+    assert s["replicas"] == 2 and s["completed"] == 1
+    assert s["ttft"]["mean"] == pytest.approx(0.5)
+    rep = fleet.format_report()
+    assert "replica0" in rep and "replica1" in rep and "nan" not in rep
+    # no front-door stats attached: no front-door block in the report
+    assert "front door" not in rep
+
+
+def test_fleet_metrics_renders_frontdoor_block():
+    from repro.serving.frontdoor import TenantSLO, make_frontdoor
+    from repro.serving.metrics import FleetMetrics
+    import numpy as np
+    from repro.retrieval.corpus import Request
+
+    fd = make_frontdoor(capacity=8, ttl=1e9, sim_threshold=1.0,
+                        slos={"acme": TenantSLO(ttft_target=0.5)},
+                        init_service=1e-6, min_replicas=1, max_replicas=2,
+                        autoscale=True, cooldown=0.0, scale_up_backlog=0.5,
+                        scale_down_backlog=0.1)
+    r = Request(req_id=0, arrival=0.0,
+                query_vec=np.ones(4, np.float32),
+                question_tokens=np.arange(4, dtype=np.int32),
+                target_doc=0, output_len=1, tenant="acme")
+    assert fd.handle(r, 0.0).kind == "miss"
+    fd.note_complete(r, docs=(0,), answer=[3], ttft=0.1, now=0.1)
+    assert fd.handle(r, 0.2).kind == "hit_exact"
+
+    fleet = FleetMetrics(router_stats={}, frontdoor_stats=fd.stats())
+    fleet.add_replica("replica0", ServingMetrics())
+    rep = fleet.format_report()
+    assert "front door" in rep and "hit rate 50.00%" in rep
+    assert "SLO acme" in rep and "attained 2/2 = 100.00%" in rep
+    assert "target 500ms" in rep
+    assert "autoscale" in rep
+    assert fleet.summary()["frontdoor"]["hit_rate"] == pytest.approx(0.5)

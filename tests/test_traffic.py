@@ -1,0 +1,154 @@
+"""Multi-tenant traffic model (retrieval/traffic.py): determinism, tenant
+mix + corpus slicing, repeat/near-duplicate structure (what the front-door
+cache feeds on), MMPP burst/diurnal arrival modulation, and the helper
+surface the drivers consume (tenant_slos / repeat_rate / split_by_tenant /
+make_default_workload)."""
+import numpy as np
+import pytest
+
+from repro.retrieval.corpus import make_corpus
+from repro.retrieval.traffic import (TenantSpec, TrafficConfig,
+                                     default_tenants, make_default_workload,
+                                     make_tenant_workload, repeat_rate,
+                                     split_by_tenant, tenant_slos)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(60, mean_doc_tokens=30, seed=0)
+
+
+def _wl(corpus, tenants, **kw):
+    kw.setdefault("n_requests", 120)
+    kw.setdefault("base_rate", 50.0)
+    kw.setdefault("seed", 7)
+    return make_tenant_workload(corpus, tenants, TrafficConfig(**kw))
+
+
+def test_trace_is_deterministic_per_seed(corpus):
+    a = _wl(corpus, default_tenants(2))
+    b = _wl(corpus, default_tenants(2))
+    c = _wl(corpus, default_tenants(2), seed=8)
+    assert len(a) == len(b) == 120
+    for ra, rb in zip(a, b):
+        assert ra.arrival == rb.arrival
+        assert ra.tenant == rb.tenant and ra.query_id == rb.query_id
+        assert np.array_equal(ra.question_tokens, rb.question_tokens)
+        assert np.array_equal(ra.query_vec, rb.query_vec)
+    assert any(x.arrival != y.arrival for x, y in zip(a, c))
+
+
+def test_request_fields_and_arrival_order(corpus):
+    wl = _wl(corpus, default_tenants(3))
+    assert [r.req_id for r in wl] == list(range(len(wl)))
+    assert all(r.tenant.startswith("tenant") for r in wl)
+    assert all(r.query_id >= 0 for r in wl)
+    assert all(r.top_k == 0 for r in wl)     # engine default until degraded
+    arr = [r.arrival for r in wl]
+    assert arr == sorted(arr) and arr[0] > 0.0
+
+
+def test_tenant_mix_follows_weights_and_slices(corpus):
+    tenants = default_tenants(3)
+    wl = _wl(corpus, tenants, n_requests=300)
+    by = split_by_tenant(wl)
+    assert set(by) == {"tenant0", "tenant1", "tenant2"}
+    # 1/rank weights: the head tenant dominates the tail
+    assert len(by["tenant0"]) > len(by["tenant2"])
+    assert sum(len(v) for v in by.values()) == len(wl)
+    # disjoint corpus slices: every target doc stays in its tenant's range
+    n_docs = 60
+    for i, t in enumerate(tenants):
+        lo, hi = int(t.doc_lo * n_docs), int(t.doc_hi * n_docs)
+        for r in by[t.name]:
+            assert lo <= r.target_doc < max(lo + 1, hi)
+
+
+def test_small_pools_repeat_and_repeats_are_exact(corpus):
+    tenants = default_tenants(2, n_queries=4)
+    wl = _wl(corpus, tenants, n_requests=200)
+    assert repeat_rate(wl) > 0.8             # tiny pools: almost all repeats
+    # repeats of a (tenant, query_id) reuse the EXACT tokens and vector —
+    # this is what makes the front door's exact hash hit
+    first = {}
+    for r in wl:
+        key = (r.tenant, r.query_id)
+        if key in first:
+            assert np.array_equal(r.question_tokens,
+                                  first[key].question_tokens)
+            assert np.array_equal(r.query_vec, first[key].query_vec)
+        else:
+            first[key] = r
+    # large pools repeat less
+    big = _wl(corpus, default_tenants(2, n_queries=64), n_requests=200)
+    assert repeat_rate(big) < repeat_rate(wl)
+
+
+def test_near_duplicates_perturb_tokens_but_not_semantics(corpus):
+    t = TenantSpec(name="t", n_queries=1, near_dup_prob=1.0)
+    wl = _wl(corpus, [t], n_requests=40)
+    base = wl[0]
+    dups = [r for r in wl[1:]
+            if not np.array_equal(r.question_tokens, base.question_tokens)]
+    assert dups                              # tokens perturbed: hash misses
+    for r in dups:
+        a = base.query_vec / np.linalg.norm(base.query_vec)
+        b = r.query_vec / np.linalg.norm(r.query_vec)
+        assert float(a @ b) > 0.95           # ... but the vector stays close
+
+
+def test_burst_multiplier_compresses_the_trace(corpus):
+    calm = _wl(corpus, default_tenants(1), n_requests=400)
+    bursty = _wl(corpus, default_tenants(1), n_requests=400,
+                 burst_rate_mult=8.0)
+    # MMPP bursts raise the instantaneous rate for burst spans only, so the
+    # same request count arrives in strictly less wall-clock time
+    assert bursty[-1].arrival < calm[-1].arrival
+    # ... and the minimum gap shrinks (bursts pack arrivals together)
+    gaps = lambda wl: np.diff([r.arrival for r in wl])
+    assert np.median(gaps(bursty)) < np.median(gaps(calm))
+
+
+def test_diurnal_modulation_changes_arrivals_not_content(corpus):
+    flat = _wl(corpus, default_tenants(1), n_requests=100)
+    wavy = _wl(corpus, default_tenants(1), n_requests=100,
+               diurnal_amplitude=0.9, diurnal_period=1.0)
+    assert [r.query_id for r in flat] == [r.query_id for r in wavy]
+    assert any(a.arrival != b.arrival for a, b in zip(flat, wavy))
+
+
+def test_drift_reshuffles_query_popularity(corpus):
+    still = _wl(corpus, default_tenants(1, n_queries=8), n_requests=200,
+                drift=0.0, n_phases=4)
+    drifted = _wl(corpus, default_tenants(1, n_queries=8), n_requests=200,
+                  drift=0.9, n_phases=4)
+    assert [r.query_id for r in still] != [r.query_id for r in drifted]
+
+
+def test_output_len_mean_draws_multi_token_answers(corpus):
+    t = TenantSpec(name="t", output_len_mean=4)
+    wl = _wl(corpus, [t], n_requests=60)
+    lens = [r.output_len for r in wl]
+    assert max(lens) > 1 and all(1 <= n <= 32 for n in lens)
+    one = TenantSpec(name="t", output_len_mean=1)
+    assert all(r.output_len == 1 for r in _wl(corpus, [one], n_requests=20))
+
+
+def test_tenant_slos_and_empty_tenants_rejected(corpus):
+    tenants = default_tenants(2, slo_ttft_ms=400.0)
+    slos = tenant_slos(tenants)
+    assert slos["tenant0"] == pytest.approx(0.4)
+    assert slos["tenant1"] > slos["tenant0"]     # tail tenants get slack
+    with pytest.raises(ValueError):
+        make_tenant_workload(corpus, [], TrafficConfig(n_requests=1,
+                                                       base_rate=1.0))
+
+
+def test_make_default_workload_one_call_setup(corpus):
+    tenants, wl = make_default_workload(corpus, n_tenants=2, n_requests=50,
+                                        rate=25.0, n_queries=6, seed=3,
+                                        output_len_mean=2)
+    assert len(tenants) == 2 and len(wl) == 50
+    assert {r.tenant for r in wl} <= {t.name for t in tenants}
+    assert all(t.output_len_mean == 2 for t in tenants)
+    assert repeat_rate(wl) > 0.0
