@@ -1,0 +1,76 @@
+"""Tensor-parallel scaling sweep: one replica at tp = 1 / 2 / 4.
+
+Drives the analytic simulator with ``SimConfig.tp`` (service times from
+``HardwareProfile.with_tp``: compute and HBM/PCIe bandwidth scale by tp,
+every forward pays a ring all-reduce term that GROWS with tp) over the
+same Zipf workload and asserts the headline shape of TP serving:
+
+  * TTFT strictly improves with tp (prefill is compute-bound, decode and
+    promote/demote copies are bandwidth-bound — all shard);
+  * per-request SERVICE time scales SUB-linearly (the collective term
+    does not shard), so tp4 gains less per device than tp2 — while e2e
+    TTFT may beat linear because queueing delay drains on top;
+  * the cache keeps paying at every tp (exact hit counts shift with tp
+    here because PGDSF priorities rescale with service times; the real
+    engines prove bit-exact tp-invariance in tests/test_tp_serving.py).
+
+Rows are deterministic simulator TTFTs -> tracked by perf_guard.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PROFILES, simulate, smoke_clamp
+from repro.retrieval.corpus import make_corpus, make_workload
+from repro.retrieval.vectordb import IVFIndex
+
+PROFILE = PROFILES["mistral-7b"]
+TPS = (1, 2, 4)
+
+
+def _setup():
+    n_docs = smoke_clamp(600, 80)
+    corpus = make_corpus(n_docs, mean_doc_tokens=smoke_clamp(800, 120),
+                         seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=max(4, n_docs // 12),
+                   nprobe=8, seed=0)
+    wl = make_workload(corpus, n_requests=smoke_clamp(240, 100), rate=2.0,
+                       zipf_s=1.2, output_len_mean=4, seed=1)
+    return corpus, idx, wl
+
+
+def run() -> list:
+    corpus, idx, wl = _setup()
+    rows, ttft, hits = [], {}, {}
+    for tp in TPS:
+        m, _ = simulate(corpus, idx, wl, profile=PROFILE, tp=tp, top_k=2,
+                        gpu_cache_bytes=4 * 2**30,
+                        host_cache_bytes=32 * 2**30)
+        ttft[tp], hits[tp] = m.avg_ttft, m.hit_tokens_gpu
+        rows.append((
+            f"fig_tp/tp{tp}", m.avg_ttft * 1e6,
+            f"p99={m.p99_ttft:.3f}s tpot={m.avg_tpot * 1e3:.1f}ms "
+            f"hit={m.doc_hit_rate:.2f} gpu_hit_tok={m.hit_tokens_gpu}"))
+
+    # headline 1: TTFT strictly improves with tp
+    assert ttft[1] > ttft[2] > ttft[4], (
+        f"TP stopped paying: ttft {ttft}")
+    # headline 2: SERVICE-time scaling is sub-linear — the all-reduce term
+    # does not shard.  (End-to-end TTFT can scale SUPER-linearly: halving
+    # service time also drains queueing delay, so the TTFT ratio routinely
+    # beats 2x under load and is the wrong quantity to bound.)
+    svc = {tp: PROFILE.with_tp(tp).prefill_time(1024, 1024) for tp in TPS}
+    s2, s4 = svc[1] / svc[2], svc[1] / svc[4]
+    assert s2 < 2.0 and s4 < 4.0 and s4 < 2 * s2, (
+        f"service speedups {s2:.2f}x/{s4:.2f}x exceed the collective-bounded"
+        f" model: {svc}")
+    rows.append(("fig_tp/claim/sublinear_speedup", float(s4 * 1e3),
+                 f"service tp2={s2:.2f}x tp4={s4:.2f}x (linear: 2x/4x); "
+                 f"e2e ttft tp2={ttft[1] / ttft[2]:.2f}x "
+                 f"tp4={ttft[1] / ttft[4]:.2f}x (queueing drains on top)"))
+    # headline 3: the cache keeps paying at every tp.  (Exact hit counts
+    # are NOT tp-invariant in the analytic simulator: PGDSF priorities are
+    # computed from measured service times, which with_tp rescales, so
+    # eviction order shifts with tp.  The bit-exact claim — sharding never
+    # changes what the knowledge tree hits — belongs to the real engines
+    # and is asserted per-request in tests/test_tp_serving.py.)
+    assert min(hits.values()) > 0, f"cache stopped hitting: {hits}"
+    return rows

@@ -28,6 +28,7 @@ from typing import Dict, List, Tuple
 TRACKED = (
     "fig_frontdoor/",
     "fig_replica/",
+    "fig_tp/",
     "fig13_",
 )
 MAX_RATIO = 2.0

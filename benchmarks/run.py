@@ -32,6 +32,7 @@ MODULES = [
     "fig_tiered_cache",
     "fig_replica_routing",
     "fig_frontdoor",
+    "fig_tp_scaling",
     "tab4_sched_time",
     "throughput_batching",
     "tpot_topk",

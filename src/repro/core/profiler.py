@@ -35,6 +35,35 @@ class HardwareProfile:
     # bandwidth of the local NVMe the mmap'd KV segments live on
     disk_bytes_per_s: float = 6e9
 
+    # per-forward collective time (tensor-parallel all-reduce of the
+    # activations after attention + MLP); 0 on single-device profiles,
+    # set by with_tp() — this term does NOT shrink with tp, which is why
+    # TP speedup saturates below linear
+    collective_s: float = 0.0
+
+    def with_tp(self, tp: int, ici_allreduce_s: float = 1.5e-3
+                ) -> "HardwareProfile":
+        """Derived profile for a tp-way tensor-parallel replica.
+
+        Compute, HBM bandwidth, and the host link all scale by ``tp``
+        (params, pool KV-head planes, and decode kernels are sharded over
+        the mesh's model axis; promote/demote copies move per-shard slices
+        in parallel), while every forward gains a ring all-reduce term
+        ``2 (tp-1)/tp * ici_allreduce_s`` that grows with tp.  The
+        simulator applies this via ``SimConfig.tp``.
+        """
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        if tp == 1:
+            return self
+        return dataclasses.replace(
+            self, name=f"{self.name}-tp{tp}",
+            flops_per_s=self.flops_per_s * tp,
+            hbm_bytes_per_s=self.hbm_bytes_per_s * tp,
+            pcie_bytes_per_s=self.pcie_bytes_per_s * tp,
+            collective_s=self.collective_s
+            + 2.0 * (tp - 1) / tp * ici_allreduce_s)
+
     def prefill_time(self, alpha: int, beta: int) -> float:
         """Time to prefill beta new tokens on top of alpha cached tokens."""
         if beta <= 0:
@@ -45,7 +74,7 @@ class HardwareProfile:
         # weights stream through SRAM at least once regardless of beta
         weight_floor = self.model_bytes / self.hbm_bytes_per_s
         return (flops / self.flops_per_s + weight_floor
-                + self.fixed_overhead_s)
+                + self.fixed_overhead_s + self.collective_s)
 
     def transfer_time(self, n_bytes: float) -> float:
         return n_bytes / self.pcie_bytes_per_s + 1e-4
@@ -58,7 +87,7 @@ class HardwareProfile:
         """One decode iteration for a batch (weight + KV reads, mem-bound)."""
         weight = self.model_bytes
         kv = batch * context * self.kv_bytes_per_token
-        return (weight + kv) / self.hbm_bytes_per_s + 1e-3
+        return (weight + kv) / self.hbm_bytes_per_s + 1e-3 + self.collective_s
 
 
 def _attn_dim(p: HardwareProfile) -> float:

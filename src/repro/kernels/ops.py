@@ -9,6 +9,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import prefix_attention as _pa
 from repro.kernels import paged_attention as _pg
@@ -43,7 +44,8 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths,
 
 def paged_decode_attention(q, k_pages, v_pages, tables, counts, starts, qpos,
                            layer, window, *, logit_cap: float = 0.0,
-                           impl: str | None = None):
+                           impl: str | None = None, mesh=None,
+                           axis: str = "model"):
     """Decode attention straight from the pool's layer-major page arrays
     (the serving runtime's steady-state hot path; see paged_attention.py for
     the run/slot-mapping contract).  Dispatch:
@@ -57,6 +59,15 @@ def paged_decode_attention(q, k_pages, v_pages, tables, counts, starts, qpos,
 
     Not jit-wrapped: this is called per-layer inside the (already jitted)
     decode step's layer scan, where ``layer``/``window`` are traced values.
+
+    ``mesh``: tensor-parallel serving (serving/runtime.py ``--tp N``).  The
+    jnp path ignores it — GSPMD partitions the per-head einsums along the
+    sharded KV dim on its own.  The Pallas kernel cannot be auto-partitioned
+    (pallas_call is opaque to the SPMD partitioner), so the pallas/interpret
+    paths dispatch the kernel PER SHARD via ``shard_map``: each device runs
+    the unchanged kernel over its local head tile — q sharded on heads, the
+    pool planes on KV heads — with head-local block tables (the run tables
+    are head-independent, hence replicated verbatim onto every shard).
     """
     if impl is None:
         impl = "pallas" if _on_tpu() else "jnp"
@@ -66,7 +77,40 @@ def paged_decode_attention(q, k_pages, v_pages, tables, counts, starts, qpos,
                                     logit_cap=logit_cap)
     if impl not in ("pallas", "interpret"):
         raise ValueError(f"unknown paged-attention impl {impl!r}")
+    if mesh is not None and mesh.shape.get(axis, 1) > 1:
+        return _paged_decode_sharded(q, k_pages, v_pages, tables, counts,
+                                     starts, qpos, layer, window,
+                                     logit_cap=logit_cap,
+                                     interpret=impl == "interpret",
+                                     mesh=mesh, axis=axis)
     return _pg.paged_decode_attention(q, k_pages, v_pages, tables, counts,
                                       starts, qpos, layer, window,
                                       logit_cap=logit_cap,
                                       interpret=impl == "interpret")
+
+
+def _paged_decode_sharded(q, k_pages, v_pages, tables, counts, starts, qpos,
+                          layer, window, *, logit_cap: float, interpret: bool,
+                          mesh, axis: str):
+    """Per-shard Pallas dispatch: grid shrinks to the shard's H/tp heads and
+    the shard's (KV/tp)-head pool plane; no collectives — decode attention
+    is embarrassingly parallel over heads (the later wo matmul's all-reduce
+    belongs to the surrounding GSPMD program)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_l, kp_l, vp_l, tb, cn, st, qp, li, w):
+        return _pg.paged_decode_attention(q_l, kp_l, vp_l, tb, cn, st, qp,
+                                          li, w, logit_cap=logit_cap,
+                                          interpret=interpret)
+
+    rep2 = P(None, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, axis, None),
+                  P(None, None, None, axis, None),
+                  P(None, None, None, axis, None),
+                  rep2, rep2, rep2, P(None), P(), P()),
+        out_specs=P(None, axis, None), check_rep=False)
+    return fn(q, k_pages, v_pages, tables, counts, starts, qpos,
+              jnp.asarray(layer, jnp.int32), jnp.asarray(window, jnp.int32))

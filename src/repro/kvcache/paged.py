@@ -88,17 +88,44 @@ class PagedKVStore:
     """
 
     def __init__(self, n_layers: int, n_blocks: int, block_size: int,
-                 n_kv: int, head_dim: int, dtype=np.float32, device: bool = False):
+                 n_kv: int, head_dim: int, dtype=np.float32,
+                 device: bool = False, kv_sharding=None):
         self.pool = BlockPool(n_blocks, block_size)
         self.block_size = block_size
         shape = (n_layers, n_blocks, block_size, n_kv, head_dim)
         self.device = device and jax is not None
+        # Tensor-parallel serving: a NamedSharding over the KV-head dim
+        # (launch/sharding.py::pool_kv_spec) — the pool planes are created
+        # sharded, and everything written into them (put/append) lands
+        # shard-local, so no plane is ever materialized on one device.
+        self.kv_sharding = kv_sharding if self.device else None
         if self.device:
             self.k = jnp.zeros(shape, dtype)
             self.v = jnp.zeros(shape, dtype)
+            if self.kv_sharding is not None:
+                self.k = jax.device_put(self.k, self.kv_sharding)
+                self.v = jax.device_put(self.v, self.kv_sharding)
         else:
             self.k = np.zeros(shape, dtype)
             self.v = np.zeros(shape, dtype)
+
+    def _shard_segment(self, k_seg, v_seg):
+        """Promotion path of a sharded pool: place an incoming contiguous
+        (L, B, T, KV, hd) segment with its KV heads split the same way the
+        pool is, so the host->device copy is BATCHED per mesh-axis member —
+        each device receives exactly its head slice, instead of a full
+        replica that the next pool write would reshard collectively."""
+        if self.kv_sharding is None or not self.device:
+            return k_seg, v_seg
+        if not isinstance(k_seg, np.ndarray):
+            # device-computed segment (prefill cache slice): GSPMD already
+            # placed its KV heads; the pool write reshards if needed
+            return k_seg, v_seg
+        seg_sh = jax.sharding.NamedSharding(
+            self.kv_sharding.mesh,
+            jax.sharding.PartitionSpec(None, None, None,
+                                       *self.kv_sharding.spec[3:]))
+        return jax.device_put(k_seg, seg_sh), jax.device_put(v_seg, seg_sh)
 
     def bytes_per_token(self) -> int:
         L, _, _, KV, hd = self.k.shape
@@ -115,6 +142,7 @@ class PagedKVStore:
         blocks = self.pool.alloc(nb)
         pad = nb * self.block_size - T
         if self.device:
+            k_seg, v_seg = self._shard_segment(k_seg, v_seg)
             ks = jnp.pad(k_seg[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
             vs = jnp.pad(v_seg[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
             ks = ks.reshape(ks.shape[0], nb, self.block_size, *ks.shape[2:])
@@ -155,6 +183,7 @@ class PagedKVStore:
         blk = np.asarray(seg.blocks, np.int64)[pos // self.block_size]
         slot = pos % self.block_size
         if self.device:
+            k_new, v_new = self._shard_segment(k_new, v_new)
             bi = jnp.asarray(blk)
             si = jnp.asarray(slot)
             self.k = self.k.at[:, bi, si].set(k_new[:, 0].astype(self.k.dtype))

@@ -28,7 +28,9 @@ from repro.configs import ASSIGNED, get_config
 from repro.launch.hlo_analysis import (COLLECTIVES, analyze,
                                        normalize_cost_analysis)
 from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import spec_summary
 from repro.launch.specs import SHAPES, input_specs, shape_applicable
+from repro.models import model as M
 
 # ---- hardware constants (TPU v5e) ----------------------------------------
 PEAK_FLOPS = 197e12          # bf16 per chip
@@ -148,6 +150,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         n_chips = mesh.devices.size
+        # surface the CHOSEN partition specs (incl. silent replication
+        # fallbacks for ragged head counts) next to the roofline numbers
+        params_shape = jax.eval_shape(
+            lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+        spec_text = spec_summary(cfg, mesh, params_shape)
+        print(spec_text, flush=True)
+        rec["partition_specs"] = spec_text.splitlines()
         with mesh:
             fn, args, donate, out_sh = input_specs(cfg, shape_name, mesh)
             jitted = jax.jit(fn, donate_argnums=donate, out_shardings=out_sh)

@@ -17,6 +17,25 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_serving_mesh(tp: int):
+    """One serving replica's mesh: ``(data=1, model=tp)``.
+
+    Serving replicas are data-parallel ACROSS replicas (PR 4's router owns
+    that axis as whole processes), so within a replica only the model axis
+    is real; the size-1 data axis keeps every ``data_axes``-consuming rule
+    in ``launch/sharding.py`` well-defined.  Requires ``tp`` visible devices
+    (on CPU: ``--xla_force_host_platform_device_count``)."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    avail = jax.local_device_count()
+    if avail < tp:
+        raise ValueError(
+            f"--tp {tp} needs {tp} devices but only {avail} are visible; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} (before the first jax import)")
+    return jax.make_mesh((1, tp), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """The batch-sharding axes of a mesh (pod included when present)."""
     names = mesh.axis_names

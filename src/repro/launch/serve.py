@@ -15,6 +15,14 @@ for A/B sweeps).  Routing never changes computation — a request's greedy
 tokens are a pure function of (docs, question) — so ``--check-tokens``
 stays bit-identical to the single sequential engine at any replica count.
 
+``--tp N`` makes each continuous runtime span N devices: params are
+sharded by the Megatron column/row rules (launch/sharding.py), the paged
+pool's KV-head plane is sharded over the mesh's model axis, and the paged
+decode kernel dispatches per shard with head-local block tables
+(shard_map).  Tensor parallelism never changes greedy tokens either, so
+``--check-tokens`` holds at tp x replicas (2D fleet).  On CPU, expose
+devices with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
 ``--frontdoor`` puts the front-door request layer ahead of the router
 (serving/frontdoor.py): a query-level cache (exact token-hash + cosine
 similarity hits, TTL + LRU bounded), per-tenant SLO-aware admission
@@ -49,10 +57,13 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.sharding import assert_tp_compatible, spec_summary
 from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.traffic import make_default_workload
 from repro.retrieval.vectordb import IVFIndex
+from repro.serving.config import (EngineConfig, FleetConfig, FrontDoorConfig)
 from repro.serving.engine import RAGServer
 from repro.serving.frontdoor import (TenantSLO, attach_answers,
                                      frontdoor_partition, make_frontdoor)
@@ -185,6 +196,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--search-scale", type=float, default=1.0,
                     help="scale staged-search stage durations (emulate "
                          "paper-scale 78-446 ms searches on a tiny corpus)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per replica: shard params "
+                         "(Megatron col/row), paged-pool KV-head planes and "
+                         "decode kernels over a (1, tp) device mesh.  "
+                         "Requires tp visible devices (on CPU: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N).  Greedy tokens stay bit-identical to --tp 1, "
+                         "so --check-tokens holds at any tp; composes with "
+                         "--replicas into a 2D fleet (tp within a replica, "
+                         "affinity routing across replicas)")
     ap.add_argument("--sequential", action="store_true",
                     help="serve through the old one-at-a-time RAGServer")
     ap.add_argument("--check-tokens", action="store_true",
@@ -228,15 +249,12 @@ def tier_hit_line(tree) -> str:
             f"(spilled {s['spill_bytes']} B, fetched {s['fetch_bytes']} B)")
 
 
-def serve_sequential(cfg, params, corpus, idx, wl, args):
-    srv = RAGServer(cfg, params, corpus, idx, top_k=args.top_k,
-                    gpu_cache_bytes=args.gpu_cache_bytes,
-                    host_cache_bytes=args.host_cache_bytes,
-                    disk_cache_bytes=args.disk_cache_bytes,
-                    disk_cache_dir=args.disk_cache_dir,
-                    policy=args.policy, reorder=not args.no_reorder,
-                    speculative=not args.no_spec,
-                    prefill_chunk=args.prefill_chunk)
+def serve_sequential(cfg, params, corpus, idx, wl, args, econf=None):
+    # The sequential engine is the single-device token oracle: it takes the
+    # same EngineConfig but deliberately ignores config.mesh, so
+    # --check-tokens compares sharded continuous vs unsharded sequential.
+    econf = econf if econf is not None else EngineConfig.from_args(args)
+    srv = RAGServer(cfg, params, corpus, idx, config=econf)
     t0 = time.time()
     results = srv.serve(wl, max_new_tokens=args.max_new_tokens)
     wall = time.time() - t0
@@ -257,26 +275,19 @@ def serve_sequential(cfg, params, corpus, idx, wl, args):
     return results
 
 
-def make_runtimes(cfg, params, corpus, idx, args, n):
-    return [ContinuousRuntime(
-        cfg, params, corpus, idx, top_k=args.top_k, policy=args.policy,
-        gpu_cache_bytes=args.gpu_cache_bytes,
-        host_cache_bytes=args.host_cache_bytes,
-        disk_cache_bytes=args.disk_cache_bytes,
-        disk_cache_dir=args.disk_cache_dir,
-        reorder=not args.no_reorder, speculative=not args.no_spec,
-        max_batch=args.max_batch, block_size=args.block_size,
-        attn=args.attn,
-        prefill_chunk=args.prefill_chunk,
-        max_prefill_tokens=args.max_prefill_tokens,
-        search_time_scale=args.search_scale) for _ in range(n)]
+def make_runtimes(cfg, params, corpus, idx, args, n, econf=None):
+    econf = econf if econf is not None else EngineConfig.from_args(args)
+    return [ContinuousRuntime(cfg, params, corpus, idx, config=econf)
+            for _ in range(n)]
 
 
-def serve_continuous(cfg, params, corpus, idx, wl, args):
+def serve_continuous(cfg, params, corpus, idx, wl, args, econf=None,
+                     fleet_conf=None):
     n = max(1, args.replicas)
-    rts = make_runtimes(cfg, params, corpus, idx, args, n)
-    router = ReplicaRouter(rts, policy=args.routing,
-                           max_queue_skew=args.max_queue_skew)
+    fleet_conf = (fleet_conf if fleet_conf is not None
+                  else FleetConfig.from_args(args))
+    rts = make_runtimes(cfg, params, corpus, idx, args, n, econf=econf)
+    router = ReplicaRouter(rts, config=fleet_conf)
     # partition the trace in arrival order by the request's retrieved docs
     # (deterministic, equal to the runtime's final staged-search result);
     # the in-flight window models per-replica backlog draining while the
@@ -320,37 +331,41 @@ def serve_continuous(cfg, params, corpus, idx, wl, args):
     return results
 
 
-def build_frontdoor(args, tenants):
-    """Assemble the FrontDoor policy stack from CLI flags.  The SAME
-    constructor path the simulator benchmarks use (make_frontdoor), so
-    every driver assembles the identical policy objects."""
+def build_frontdoor(args, tenants, fdc=None):
+    """Assemble the FrontDoor policy stack from CLI flags (via
+    FrontDoorConfig).  The SAME constructor path the simulator benchmarks
+    use (make_frontdoor), so every driver assembles the identical policy
+    objects."""
+    fdc = fdc if fdc is not None else FrontDoorConfig.from_args(args)
     slos = {}
     if tenants:
         slos = {t.name: TenantSLO(ttft_target=t.slo_ttft_ms / 1e3,
                                   min_top_k=t.min_top_k) for t in tenants}
     n = max(1, args.replicas)
     return make_frontdoor(
-        capacity=args.frontdoor_capacity, ttl=args.frontdoor_ttl,
-        sim_threshold=args.frontdoor_sim_threshold, slos=slos,
-        default_slo_ttft=args.slo_ttft_ms / 1e3, top_k=args.top_k,
-        min_replicas=min(max(1, args.autoscale_min), n), max_replicas=n,
-        autoscale=args.autoscale,
-        scale_up_backlog=args.scale_up_backlog,
-        scale_down_backlog=args.scale_down_backlog,
-        cooldown=args.autoscale_cooldown)
+        capacity=fdc.capacity, ttl=fdc.ttl,
+        sim_threshold=fdc.sim_threshold, slos=slos,
+        default_slo_ttft=fdc.slo_ttft_ms / 1e3, top_k=args.top_k,
+        min_replicas=min(max(1, fdc.autoscale_min), n), max_replicas=n,
+        autoscale=fdc.autoscale,
+        scale_up_backlog=fdc.scale_up_backlog,
+        scale_down_backlog=fdc.scale_down_backlog,
+        cooldown=fdc.cooldown)
 
 
-def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args):
+def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args, econf=None,
+                    fleet_conf=None, fdc=None):
     """Serve through front door -> router -> N continuous runtimes.
 
     Returns (miss_results, part): engine results for admitted misses (the
     --check-tokens comparison set; hits are served from cache and shed
     requests never execute, so both are excluded by construction)."""
     n = max(1, args.replicas)
-    rts = make_runtimes(cfg, params, corpus, idx, args, n)
-    router = ReplicaRouter(rts, policy=args.routing,
-                           max_queue_skew=args.max_queue_skew)
-    fd = build_frontdoor(args, tenants)
+    fleet_conf = (fleet_conf if fleet_conf is not None
+                  else FleetConfig.from_args(args))
+    rts = make_runtimes(cfg, params, corpus, idx, args, n, econf=econf)
+    router = ReplicaRouter(rts, config=fleet_conf)
+    fd = build_frontdoor(args, tenants, fdc=fdc)
     part = frontdoor_partition(
         fd, router, wl,
         docs_of=lambda r: idx.search(r.query_vec,
@@ -390,9 +405,31 @@ def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args):
 
 def main() -> None:
     args = build_parser().parse_args()
+    # the config dataclasses are built ONCE from argparse here and threaded
+    # through every constructor below (the loose-kwargs path stays for
+    # library callers but is deprecated; see serving/config.py)
+    econf = EngineConfig.from_args(args)
+    fleet_conf = FleetConfig.from_args(args)
+    fdc = FrontDoorConfig.from_args(args)
+    if econf.mesh.tp > 1:
+        # validate head divisibility BEFORE any device work or device-count
+        # check, so a bad --arch/--tp pair fails fast on any machine
+        try:
+            assert_tp_compatible(get_reduced(args.arch), econf.mesh.tp)
+        except ValueError as e:
+            raise SystemExit(f"--tp {econf.mesh.tp}: {e}")
     cfg, params, corpus, idx, wl, tenants = make_setup(args)
     print(f"model={cfg.name} family={cfg.family} layers={cfg.n_layers} "
           f"d_model={cfg.d_model}")
+    if econf.mesh.tp > 1:
+        print(f"tensor parallel: tp={econf.mesh.tp} over a "
+              f"(1, {econf.mesh.tp}) mesh "
+              f"({jax.local_device_count()} devices visible)")
+        try:
+            smesh = make_serving_mesh(econf.mesh.tp)
+        except RuntimeError as e:  # not enough devices: clean one-liner
+            raise SystemExit(str(e))
+        print(spec_summary(cfg, smesh, params))
 
     recurrent = cfg.family in ("ssm", "hybrid")
     if recurrent and not args.sequential:
@@ -405,15 +442,19 @@ def main() -> None:
               "(no continuous engine to compare against); NOT checked")
     if args.frontdoor and (recurrent or args.sequential):
         print("note: --frontdoor requires the continuous engine; ignored")
+    if econf.mesh.tp > 1 and (recurrent or args.sequential):
+        print("note: --tp applies to the continuous engine only; the "
+              "sequential engine is the single-device token oracle")
     if args.frontdoor and not recurrent and not args.sequential:
         miss_results, part = serve_frontdoor(cfg, params, corpus, idx, wl,
-                                             tenants, args)
+                                             tenants, args, econf=econf,
+                                             fleet_conf=fleet_conf, fdc=fdc)
         if args.check_tokens:
             # compare ONLY admitted misses (the requests an engine actually
             # served, with the front door's top_k rewrites applied); hits
             # are answered from cache and shed requests never execute
             seq = serve_sequential(cfg, params, corpus, idx,
-                                   list(part.misses), args)
+                                   list(part.misses), args, econf=econf)
             seq_by_id = {r.req_id: r for r in seq}
             mismatches = [
                 (a.req_id, a.tokens, seq_by_id[a.req_id].tokens)
@@ -428,8 +469,10 @@ def main() -> None:
                   f"by construction)")
         return
     if args.check_tokens and not recurrent:
-        cont = serve_continuous(cfg, params, corpus, idx, wl, args)
-        seq = serve_sequential(cfg, params, corpus, idx, wl, args)
+        cont = serve_continuous(cfg, params, corpus, idx, wl, args,
+                                econf=econf, fleet_conf=fleet_conf)
+        seq = serve_sequential(cfg, params, corpus, idx, wl, args,
+                               econf=econf)
         mismatches = [
             (a.req_id, a.tokens, b.tokens)
             for a, b in zip(cont, sorted(seq, key=lambda r: r.req_id))
@@ -440,9 +483,10 @@ def main() -> None:
         print(f"\ntoken check: all {len(cont)} requests identical "
               f"(continuous == sequential)")
     elif args.sequential or recurrent:
-        serve_sequential(cfg, params, corpus, idx, wl, args)
+        serve_sequential(cfg, params, corpus, idx, wl, args, econf=econf)
     else:
-        serve_continuous(cfg, params, corpus, idx, wl, args)
+        serve_continuous(cfg, params, corpus, idx, wl, args,
+                         econf=econf, fleet_conf=fleet_conf)
 
 
 if __name__ == "__main__":

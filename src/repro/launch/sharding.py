@@ -51,6 +51,92 @@ def _heads_tile_cleanly(cfg: ModelConfig, msize: int) -> bool:
     return True
 
 
+def kv_heads_shardable(cfg: ModelConfig, tp: int) -> bool:
+    """True when a ``tp``-way model axis splits attention into WHOLE heads:
+    the paged pool's ``(L, n_blocks, block, KV, hd)`` planes shard dim 3, so
+    a KV head split *across* devices would tear a page's head tile apart
+    (and break the per-shard kernel dispatch's head-local block tables)."""
+    return (tp >= 1 and cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0)
+
+
+def assert_tp_compatible(cfg: ModelConfig, tp: int) -> None:
+    """Error EARLY (before any mesh/device work) on a mesh/model pair that
+    would shard a KV head across devices.  ``param_spec`` itself falls back
+    to replication for awkward head counts — silently correct for dense
+    training, but the serving pool cannot fall back: its layout IS the head
+    dim.  Raising here turns a latent wrong-layout run into a one-line
+    ``serve.py --tp`` error."""
+    if tp > 1 and not kv_heads_shardable(cfg, tp):
+        raise ValueError(
+            f"--tp {tp} would shard a KV head across devices: {cfg.name} has "
+            f"{cfg.n_heads} query / {cfg.n_kv_heads} KV heads, and the paged "
+            f"pool shards whole KV heads over the model axis.  Pick tp "
+            f"dividing both head counts "
+            f"(e.g. {_clean_tps(cfg)}).")
+
+
+def _clean_tps(cfg: ModelConfig, limit: int = 8) -> list:
+    return [t for t in range(1, limit + 1)
+            if kv_heads_shardable(cfg, t)]
+
+
+def spec_summary(cfg: ModelConfig, mesh: Mesh, params_shape) -> str:
+    """One-line-per-rule summary of the CHOSEN partition specs — surfaces
+    the silent ``param_spec`` fallbacks (ragged heads, non-divisible d_ff /
+    experts) that otherwise only show up as replicated HLO.  Printed by
+    ``launch/dryrun.py`` and by ``serve.py --tp`` so the operator sees what
+    actually sharded."""
+    msize = _axis_size(mesh, "model")
+    lines = [f"partition specs over model={msize} "
+             f"(fused heads tile cleanly: "
+             f"{_heads_tile_cleanly(cfg, msize)}; whole-KV-head serving "
+             f"split: {kv_heads_shardable(cfg, msize)}):"]
+    seen = {}
+    leaves = jax.tree_util.tree_leaves_with_path(params_shape)
+    for path, leaf in leaves:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        spec = param_spec(keys, leaf, cfg, mesh)
+        name = keys[-1]
+        sharded = any(s is not None for s in spec)
+        label = f"{spec}" if sharded else "replicated"
+        if name not in seen:
+            seen[name] = label
+        elif seen[name] != label:
+            seen[name] += f" | {label}"
+    for name in sorted(seen):
+        lines.append(f"  {name:12s} -> {seen[name]}")
+    return "\n".join(lines)
+
+
+def pool_kv_spec() -> P:
+    """Paged-pool partition spec: ``(L, n_blocks, block, KV, hd)`` shards
+    whole KV heads over ``model``; block geometry stays replicated (block
+    tables / slot mappings are identical on every shard)."""
+    return P(None, None, None, "model", None)
+
+
+def serving_param_shardings(cfg: ModelConfig, params_shape, mesh: Mesh):
+    """``param_shardings`` minus row parallelism: the serving engine's
+    deterministic-TP mode (models/layers.py::tp_deterministic).
+
+    ``wo``/``wd`` REPLICATE instead of sharding their contraction rows.
+    Row-parallel matmuls lower to per-device partial sums + all-reduce,
+    whose float accumulation order differs from the single-device matmul —
+    logits then drift a few ulps per layer and near-tie argmaxes flip
+    greedy tokens between mesh sizes.  With the row matrices replicated
+    AND ``dense_rowsum`` gathering the sharded activations first, every
+    contraction is computed whole on each device: serving stays
+    bit-identical at tp 1/2/4 (the --check-tokens contract) at the cost of
+    not sharding the two down-projections.  Training keeps full Megatron
+    row parallelism via ``param_shardings``."""
+    def spec(path, leaf):
+        if path and path[-1] in ("wo", "wd"):
+            return P()
+        return param_spec(path, leaf, cfg, mesh)
+    return tree_shardings(params_shape, spec, mesh)
+
+
 def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name]
 

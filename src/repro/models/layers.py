@@ -13,6 +13,7 @@ Memory discipline (these run at seq 4k-500k under 512-way SPMD):
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -62,6 +63,52 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Arra
     if b is not None:
         y = y + b
     return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# deterministic tensor-parallel serving
+# --------------------------------------------------------------------------
+# Trace-time toggle for the serving runtime's TP path.  Cross-device float
+# summation (the partial-sum all-reduce GSPMD lowers row-parallel
+# contractions to) is the ONE source of mesh-size-dependent numerics: its
+# accumulation order differs from the single-device matmul, so logits drift
+# a few ulps and near-tie argmaxes flip greedy tokens between tp sizes.
+# Inside tp_deterministic(mesh), dense_rowsum() reshards its activations to
+# replicated (an all-gather — pure data movement, no arithmetic) BEFORE the
+# contraction; with the serving spec also replicating the row matrices
+# (launch/sharding.py::serving_param_shardings), every device then computes
+# the full contraction locally, bit-identical to tp=1
+# (tests/test_tp_serving.py asserts token parity at mesh 1/2/4).
+# Read at TRACE time only; False (the default, and everywhere outside the
+# TP serving runtime) makes dense_rowsum exactly dense.  The constraint is
+# a bare PartitionSpec resolved against the mesh CONTEXT tp_deterministic
+# enters (never a NamedSharding closure): the ambient mesh is part of
+# jit's tracing-cache key, so traces for different meshes — or for no mesh
+# at all — can never be reused across each other.
+_TP_REPLICATE = False
+
+
+@contextlib.contextmanager
+def tp_deterministic(mesh):
+    """Trace model code with row-parallel contractions forced local."""
+    global _TP_REPLICATE
+    prev, _TP_REPLICATE = _TP_REPLICATE, True
+    try:
+        with mesh:
+            yield
+    finally:
+        _TP_REPLICATE = prev
+
+
+def dense_rowsum(x: jax.Array, w: jax.Array,
+                 b: Optional[jax.Array] = None) -> jax.Array:
+    """``dense`` for row-parallel sites (wo, wd): the contraction dim of
+    ``x`` may be sharded over the model axis.  Under tp_deterministic the
+    activations are gathered first so the sum never crosses devices."""
+    if _TP_REPLICATE:
+        from jax.sharding import PartitionSpec
+        x = jax.lax.with_sharding_constraint(x, PartitionSpec())
+    return dense(x, w, b)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -420,7 +467,7 @@ def chunked_scan(f, carry, xs, chunk: int = 256, remat: bool = True):
 
 def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
     h = jax.nn.silu(dense(x, wg)) * dense(x, wu)
-    return dense(h, wd)
+    return dense_rowsum(h, wd)      # row-parallel site (see dense_rowsum)
 
 
 def moe_dense(x, router_w, wg, wu, wd, top_k: int):

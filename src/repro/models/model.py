@@ -249,7 +249,7 @@ def _attn_block_seq(cfg: ModelConfig, p, x, window, positions, q_offset,
             logit_cap=cfg.attn_logit_softcap,
         )
     B, S = x.shape[:2]
-    o = L.dense(o.reshape(B, S, -1), p["wo"])
+    o = L.dense_rowsum(o.reshape(B, S, -1), p["wo"])
     x = x + o
     if cfg.family == "hybrid":
         x = x + _ssm_branch_seq(cfg, p, x)[0]
@@ -287,7 +287,7 @@ def _attn_block_decode(cfg: ModelConfig, p, x, window, pos, k_cache, v_cache,
     v_cache = v_cache.at[bidx, pos - 1].set(v[:, 0].astype(v_cache.dtype))
     o = L.decode_attention(q, k_cache, v_cache, pos=pos, window=window,
                            logit_cap=cfg.attn_logit_softcap)
-    o = L.dense(o.reshape(B, 1, -1), p["wo"])
+    o = L.dense_rowsum(o.reshape(B, 1, -1), p["wo"])
     x = x + o
     new_ssm = None
     if cfg.family == "hybrid":
@@ -485,7 +485,7 @@ def prefill(cfg: ModelConfig, params, inputs: Dict[str, jax.Array],
                 k_full, v_full = k, v
             o = L.flash_attention(q, k_full, v_full, q_offset=prefix_len,
                                   window=w, logit_cap=cfg.attn_logit_softcap)
-            x = x + L.dense(o.reshape(B, S, -1), p["wo"])
+            x = x + L.dense_rowsum(o.reshape(B, S, -1), p["wo"])
             y, sst_new = _ssm_branch_seq(cfg, p, x, state=sst)
             x = x + y
             h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
@@ -539,7 +539,7 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 def paged_decode_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
                       tables, counts, starts, write_blk, write_slot, pos,
-                      *, attn_impl: str | None = None):
+                      *, attn_impl: str | None = None, mesh=None):
     """One decode iteration straight against the paged pool (RAGCache's
     steady-state hot path: no dense (L, B, S, KV, hd) re-materialization).
 
@@ -554,6 +554,10 @@ def paged_decode_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
 
     Returns (logits, k_pages, v_pages).  Attention families only —
     recurrent state cannot be paged per-block.
+
+    mesh: tensor-parallel serving — forwarded to the attention dispatch
+    (per-shard Pallas via shard_map; the jnp path ignores it and lets GSPMD
+    partition the sharded-KV einsums itself).
     """
     if cfg.family in ("ssm", "hybrid"):
         raise ValueError("paged decode requires per-token KV; "
@@ -576,8 +580,8 @@ def paged_decode_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
         vp = vp.at[li, write_blk, write_slot].set(v[:, 0].astype(vp.dtype))
         o = ops.paged_decode_attention(
             q[:, 0], kp, vp, tables, counts, starts, pos - 1, li, w,
-            logit_cap=cfg.attn_logit_softcap, impl=attn_impl)
-        x = x + L.dense(o.reshape(B, 1, -1), p["wo"])
+            logit_cap=cfg.attn_logit_softcap, impl=attn_impl, mesh=mesh)
+        x = x + L.dense_rowsum(o.reshape(B, 1, -1), p["wo"])
         h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
         x = x + _ffn(cfg, p, h2)
         return (x, kp, vp), None

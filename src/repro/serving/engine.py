@@ -32,6 +32,7 @@ from repro.kvcache.paged import make_disk_store
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
+from repro.serving.config import EngineConfig
 from repro.serving.scheduler import prefill_piece_sizes
 
 
@@ -106,7 +107,23 @@ class RAGServer:
         max_prefill_bs: int = 4,
         prefill_chunk: int = 0,
         profiler: Optional[CostProfiler] = None,
+        config: Optional[EngineConfig] = None,
     ):
+        # EngineConfig path (serving/config.py); the loose kwargs remain
+        # for compatibility but are deprecated (docs/ARCHITECTURE.md §10).
+        # The sequential engine deliberately IGNORES config.mesh: it is the
+        # single-device token oracle every TP/replica configuration is
+        # checked against (--check-tokens).
+        if config is not None:
+            gpu_cache_bytes = config.gpu_cache_bytes
+            host_cache_bytes = config.host_cache_bytes
+            disk_cache_bytes = config.disk_cache_bytes
+            disk_cache_dir = config.disk_cache_dir
+            policy = config.policy
+            top_k = config.top_k
+            reorder = config.reorder
+            speculative = config.speculative
+            prefill_chunk = config.prefill_chunk
         self.cfg = cfg
         self.params = params
         self.corpus = corpus

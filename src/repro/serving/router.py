@@ -105,7 +105,13 @@ class ReplicaRouter:
 
     def __init__(self, replicas: Sequence[object], *,
                  policy: str = AFFINITY, max_queue_skew: int = 4,
-                 max_shadow_paths: int = 4096):
+                 max_shadow_paths: int = 4096, config=None):
+        # FleetConfig path (serving/config.py::FleetConfig): the replica
+        # *count* stays the caller's job (it owns the engine list); the
+        # router takes its policy knobs from the config when given.
+        if config is not None:
+            policy = config.routing
+            max_queue_skew = config.max_queue_skew
         if not replicas:
             raise ValueError("router needs at least one replica")
         if policy not in ROUTING_POLICIES:

@@ -59,6 +59,7 @@ state cannot be paged per-block; serve those through the sequential engine.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import itertools
@@ -69,6 +70,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from repro.core.controller import RAGController
 from repro.core.knowledge_tree import (CacheBackend, EvictionError,
                                        KnowledgeTree)
@@ -76,6 +79,11 @@ from repro.core.profiler import CostProfiler
 from repro.core.speculative import SpecState, SpeculativeController
 from repro.kvcache.paged import (DiskSegmentStore, OutOfBlocks, PagedKVStore,
                                  make_disk_store)
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.sharding import (assert_tp_compatible, pool_kv_spec,
+                                   serving_param_shardings)
+from repro.serving.config import EngineConfig, MeshConfig
+from repro.models import layers as L
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
@@ -135,6 +143,40 @@ class PagedBackend(CacheBackend):
         if node.payload_disk is not None:
             self.disk.delete(node.payload_disk)
         node.payload_disk = None
+
+
+class ShardedPagedBackend(PagedBackend):
+    """Tensor-parallel pool backend — the fourth implementation of the
+    ``serving/backend.py::Backend`` contract.
+
+    Same tier semantics as ``PagedBackend``, but the device tier is a
+    KV-head-sharded pool, so both hops batch their copies per mesh-axis
+    member instead of staging a replicated segment:
+
+      * demote (``swap_out``): ``device_get`` pulls each device's head slice
+        exactly once and reassembles the dense host copy;
+      * promote (``load``): the host segment enters ``store.put`` as numpy,
+        and the store's ``_shard_segment`` ``device_put``s it with the
+        pool's own KV-head sharding — one sub-copy per shard, never a full
+        replica that the pool write would immediately reshard.
+    """
+
+    def swap_out(self, node):
+        t0 = time.perf_counter()
+        k, v = self.store.gather(node.payload_gpu)
+        k, v = jax.device_get((k, v))
+        node.payload_host = {"k": np.asarray(k), "v": np.asarray(v)}
+        return time.perf_counter() - t0
+
+    def load(self, node):
+        t0 = time.perf_counter()
+        try:
+            node.payload_gpu = self.store.put(node.payload_host["k"],
+                                              node.payload_host["v"])
+        except OutOfBlocks as e:
+            raise EvictionError(str(e))   # promote() degrades to recompute
+        jax.block_until_ready(self.store.k)
+        return time.perf_counter() - t0
 
 
 @dataclasses.dataclass
@@ -243,7 +285,29 @@ class ContinuousRuntime:
         attn_impl: Optional[str] = None,
         search_time_scale: float = 1.0,
         profiler: Optional[CostProfiler] = None,
+        mesh: Optional[MeshConfig] = None,
+        config: Optional[EngineConfig] = None,
     ):
+        # EngineConfig path (serving/config.py): one frozen object carries
+        # the whole knob surface.  The loose kwargs above remain for
+        # compatibility but are deprecated — docs/ARCHITECTURE.md §10.
+        if config is not None:
+            gpu_cache_bytes = config.gpu_cache_bytes
+            host_cache_bytes = config.host_cache_bytes
+            disk_cache_bytes = config.disk_cache_bytes
+            disk_cache_dir = config.disk_cache_dir
+            policy = config.policy
+            top_k = config.top_k
+            reorder = config.reorder
+            speculative = config.speculative
+            max_batch = config.max_batch
+            prefill_chunk = config.prefill_chunk
+            max_prefill_tokens = config.max_prefill_tokens
+            block_size = config.block_size
+            attn = config.attn
+            attn_impl = config.attn_impl
+            search_time_scale = config.search_time_scale
+            mesh = config.mesh
         if cfg.family in ("ssm", "hybrid"):
             raise ValueError(
                 "recurrent-state families cannot be paged per-block; "
@@ -256,11 +320,30 @@ class ContinuousRuntime:
         self.attn = "paged" if attn == "auto" else attn
         self.attn_impl = attn_impl
         self.cfg = cfg
-        self.params = params
         self.corpus = corpus
         self.index = index
         self.top_k = top_k
         self.search_time_scale = search_time_scale
+        # ---- tensor parallelism (one replica spanning tp devices) --------
+        # Params shard per launch/sharding.py::serving_param_shardings
+        # (Megatron column rules; the two row matrices replicate — see the
+        # deterministic-TP note there); the pool's (L, n_blocks, block, KV,
+        # hd) planes shard whole KV heads over the "model" axis; block
+        # tables / slot mappings / run tables stay replicated (they are
+        # head-independent), so every scheduler/tree decision is identical
+        # at any tp.  Model code traces under layers.tp_deterministic so
+        # row-parallel contractions gather instead of all-reducing — the
+        # bit-identical --check-tokens contract across mesh sizes.
+        self.mesh_cfg = mesh or MeshConfig()
+        self._mesh = None
+        self._kv_sharding = None
+        if self.mesh_cfg.tp > 1:
+            assert_tp_compatible(cfg, self.mesh_cfg.tp)
+            self._mesh = make_serving_mesh(self.mesh_cfg.tp)
+            params = jax.device_put(
+                params, serving_param_shardings(cfg, params, self._mesh))
+            self._kv_sharding = NamedSharding(self._mesh, pool_kv_spec())
+        self.params = params
         kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
                     * jnp.dtype(cfg.jdtype).itemsize)
         if n_blocks is None:
@@ -268,7 +351,8 @@ class ContinuousRuntime:
                 gpu_cache_bytes // (block_size * kv_bytes) + 64, 128, 4096))
         self.store = PagedKVStore(cfg.n_layers, n_blocks, block_size,
                                   cfg.n_kv_heads, cfg.hd,
-                                  dtype=cfg.jdtype, device=True)
+                                  dtype=cfg.jdtype, device=True,
+                                  kv_sharding=self._kv_sharding)
         self._scratch_block = self.store.pool.alloc(1)[0]  # dummy-row sink
         self.disk = make_disk_store(disk_cache_dir, disk_cache_bytes)
         self.tree = KnowledgeTree(
@@ -278,7 +362,8 @@ class ContinuousRuntime:
             profiler=profiler or CostProfiler.from_fn(
                 lambda a, b: 1e-4 * b + 2e-8 * b * (a + b),
                 (0, 64, 256, 1024), (1, 32, 128, 512, 1024)),
-            backend=PagedBackend(self.store, self.disk),
+            backend=(ShardedPagedBackend if self._kv_sharding is not None
+                     else PagedBackend)(self.store, self.disk),
             bytes_per_token=max(kv_bytes, 1),
         )
         self.controller = RAGController(self.tree)
@@ -638,7 +723,9 @@ class ContinuousRuntime:
             seg = cs.segs[cs.seg_idx]
             take = min(left, len(seg) - cs.seg_off)
             toks = jnp.asarray(seg[cs.seg_off:cs.seg_off + take])[None]
-            logits, cache = self._prefill_fn(self.params, toks, prefix, plen)
+            with self._trace_ctx():
+                logits, cache = self._prefill_fn(self.params, toks,
+                                                 prefix, plen)
             prefix, plen = cache, plen + take
             cs.seg_off += take
             left -= take
@@ -893,6 +980,27 @@ class ContinuousRuntime:
         else:
             self._build_dense_decode_fn()
 
+    def _trace_ctx(self):
+        """Context for every call that may TRACE model code: under TP,
+        layers.tp_deterministic makes row-parallel contractions gather
+        their activations instead of lowering to a partial-sum all-reduce
+        (the one mesh-size-dependent float reduction).  jit caches the
+        traced computation, so wrapping the calls — not just the first —
+        is belt-and-braces for new shape signatures."""
+        return (L.tp_deterministic(self._mesh) if self._mesh is not None
+                else contextlib.nullcontext())
+
+    def _decode_jit_kw(self) -> dict:
+        """Under TP, pin the decode step's output shardings: tokens come
+        back replicated (the host event loop reads them), and the pool
+        planes keep the pool's own KV-head sharding so the (8, 9) donation
+        reuses the sharded buffers in place instead of silently copying."""
+        if self._kv_sharding is None:
+            return {}
+        rep = NamedSharding(self._mesh, PartitionSpec())
+        return {"out_shardings": (rep, self._kv_sharding,
+                                  self._kv_sharding)}
+
     def _build_paged_decode_fn(self) -> None:
         """Decode attention straight from the pool's page arrays: per-layer
         paged attention through run tables (kernels/ops.py dispatch — Pallas
@@ -902,20 +1010,23 @@ class ContinuousRuntime:
         only."""
         cfg = self.cfg
         impl = self.attn_impl
+        tp_mesh = self._mesh
 
         def step(params, toks, tables, counts, starts, pos,
                  write_blk, write_slot, k_pages, v_pages):
             logits, k_pages, v_pages = M.paged_decode_step(
                 cfg, params, toks, k_pages, v_pages, tables, counts, starts,
-                write_blk, write_slot, pos, attn_impl=impl)
+                write_blk, write_slot, pos, attn_impl=impl, mesh=tp_mesh)
             return jnp.argmax(logits[:, -1], axis=-1), k_pages, v_pages
 
-        self._decode_fn = jax.jit(step, donate_argnums=(8, 9))
+        self._decode_fn = jax.jit(step, donate_argnums=(8, 9),
+                                  **self._decode_jit_kw())
         # warm up the single decode shape (dummy rows decode token 0 into
         # the scratch block, exactly like a padding row in _start_decode)
         args = self._paged_decode_args([])
-        _, self.store.k, self.store.v = self._decode_fn(
-            self.params, *args, self.store.k, self.store.v)
+        with self._trace_ctx():
+            _, self.store.k, self.store.v = self._decode_fn(
+                self.params, *args, self.store.k, self.store.v)
         jax.block_until_ready(self.store.k)
 
     def _paged_decode_args(self, batch):
@@ -974,16 +1085,18 @@ class ContinuousRuntime:
             v_pages = v_pages.at[:, blk, slot].set(newv.astype(v_pages.dtype))
             return jnp.argmax(logits[:, -1], axis=-1), k_pages, v_pages
 
-        self._decode_fn = jax.jit(step, donate_argnums=(5, 6))
+        self._decode_fn = jax.jit(step, donate_argnums=(5, 6),
+                                  **self._decode_jit_kw())
         # warm up the single decode shape so its compile never lands on the
         # serving clock (all dummy rows write into the scratch block)
         toks = jnp.zeros((B, 1), jnp.int32)
         blk_map = jnp.full((B, S), self._scratch_block, jnp.int32)
         slot_map = jnp.zeros((B, S), jnp.int32)
         lengths = jnp.zeros((B,), jnp.int32)
-        _, self.store.k, self.store.v = self._decode_fn(
-            self.params, toks, blk_map, slot_map, lengths,
-            self.store.k, self.store.v)
+        with self._trace_ctx():
+            _, self.store.k, self.store.v = self._decode_fn(
+                self.params, toks, blk_map, slot_map, lengths,
+                self.store.k, self.store.v)
         jax.block_until_ready(self.store.k)
 
     def _start_decode(self) -> None:
@@ -993,12 +1106,14 @@ class ContinuousRuntime:
         t0 = time.perf_counter()
         if self.attn == "paged":
             args = self._paged_decode_args(batch)
-            next_toks, self.store.k, self.store.v = self._decode_fn(
-                self.params, *args, self.store.k, self.store.v)
+            with self._trace_ctx():
+                next_toks, self.store.k, self.store.v = self._decode_fn(
+                    self.params, *args, self.store.k, self.store.v)
         else:
-            next_toks, self.store.k, self.store.v = self._decode_fn(
-                self.params, *self._dense_decode_args(batch),
-                self.store.k, self.store.v)
+            with self._trace_ctx():
+                next_toks, self.store.k, self.store.v = self._decode_fn(
+                    self.params, *self._dense_decode_args(batch),
+                    self.store.k, self.store.v)
         next_toks = np.asarray(jax.block_until_ready(next_toks))
         dt = time.perf_counter() - t0
         self._push(self.now + dt, "decode_done",

@@ -76,6 +76,11 @@ class SimConfig:
                                    # iteration times drawn from the seeded
                                    # RNG (real accelerators are not
                                    # constant-latency; 0 = analytic times)
+    tp: int = 1                    # tensor-parallel degree of the replica:
+                                   # service times come from
+                                   # profile.with_tp(tp) (compute/bandwidth
+                                   # scale by tp, each forward pays a ring
+                                   # all-reduce term); mirrors serve.py --tp
 
 
 @dataclasses.dataclass
@@ -177,6 +182,12 @@ class RAGSimulator:
     def __init__(self, cfg: SimConfig, corpus: Corpus, index,
                  requests: Sequence[Request],
                  profiler: Optional[CostProfiler] = None):
+        # TP-scaled service times: swap the profile for its with_tp()
+        # derivative ONCE here so every consumer below (cost profiler,
+        # backend transfer times, decode_time) sees the same scaled model
+        if cfg.tp > 1:
+            cfg = dataclasses.replace(cfg,
+                                      profile=cfg.profile.with_tp(cfg.tp))
         self.cfg = cfg
         self.corpus = corpus
         self.index = index

@@ -1,0 +1,101 @@
+"""EngineConfig surface tests: argparse -> frozen dataclasses -> CLI
+round-trips, plus the config objects actually landing in the constructors
+they are threaded through (router policy knobs; the runtime/engine paths
+are exercised end-to-end by tests/test_serve_main.py and
+tests/test_tp_serving.py).
+"""
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.launch.serve import build_parser  # noqa: E402
+from repro.serving.config import (EngineConfig, FleetConfig,  # noqa: E402
+                                  FrontDoorConfig, MeshConfig)
+from repro.serving.router import ReplicaRouter  # noqa: E402
+
+
+def _parse(argv):
+    return build_parser().parse_args(list(argv))
+
+
+def test_engine_config_from_args_maps_flags():
+    args = _parse(["--policy", "lru", "--top-k", "3", "--no-reorder",
+                   "--no-spec", "--max-batch", "7", "--block-size", "8",
+                   "--attn", "dense", "--prefill-chunk", "32",
+                   "--gpu-cache-bytes", "1024", "--search-scale", "2.5",
+                   "--tp", "2"])
+    ec = EngineConfig.from_args(args)
+    assert ec.policy == "lru" and ec.top_k == 3
+    assert ec.reorder is False and ec.speculative is False
+    assert ec.max_batch == 7 and ec.block_size == 8 and ec.attn == "dense"
+    assert ec.prefill_chunk == 32 and ec.gpu_cache_bytes == 1024
+    assert ec.search_time_scale == 2.5
+    assert ec.mesh == MeshConfig(tp=2)
+
+
+def test_configs_are_frozen_and_validated():
+    ec = EngineConfig()
+    with pytest.raises(Exception):
+        ec.policy = "lru"                    # frozen dataclass
+    with pytest.raises(ValueError):
+        MeshConfig(tp=0)
+    with pytest.raises(ValueError):
+        MeshConfig(tp=2, axis="")
+
+
+@pytest.mark.parametrize("conf", [
+    EngineConfig(),
+    EngineConfig(policy="lru", top_k=5, reorder=False, speculative=False,
+                 max_batch=9, prefill_chunk=16, block_size=32, attn="paged",
+                 disk_cache_bytes=4096, disk_cache_dir="/tmp/x",
+                 search_time_scale=3.0, mesh=MeshConfig(tp=4)),
+    FleetConfig(),
+    FleetConfig(replicas=3, routing="least_loaded", max_queue_skew=9),
+    FrontDoorConfig(),
+    FrontDoorConfig(enabled=True, ttl=5.0, sim_threshold=0.5, capacity=7,
+                    autoscale=True, autoscale_min=2, scale_up_backlog=3.0,
+                    scale_down_backlog=1.0, cooldown=0.5, slo_ttft_ms=250.0),
+], ids=["engine-default", "engine-custom", "fleet-default", "fleet-custom",
+        "frontdoor-default", "frontdoor-custom"])
+def test_cli_round_trip(conf):
+    """from_args(parse(to_cli())) is the identity for every config, so a
+    config can be logged and re-run as plain flags."""
+    assert type(conf).from_args(_parse(conf.to_cli())) == conf
+
+
+def test_router_takes_fleet_config():
+    r = ReplicaRouter([object(), object()],
+                      config=FleetConfig(replicas=2, routing="round_robin",
+                                         max_queue_skew=7))
+    assert r.policy == "round_robin" and r.max_queue_skew == 7
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (CI installs hypothesis; local runs skip)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(tp=st.integers(min_value=1, max_value=128))
+    def test_mesh_config_cli_round_trip(tp):
+        """MeshConfig survives the CLI: to_cli() -> argparse -> from_args
+        reproduces the exact config for any valid tp."""
+        mc = MeshConfig(tp=tp)
+        assert MeshConfig.from_args(_parse(mc.to_cli())) == mc
+
+    @settings(max_examples=25, deadline=None)
+    @given(tp=st.integers(min_value=1, max_value=16),
+           top_k=st.integers(min_value=1, max_value=8),
+           reorder=st.booleans(), spec=st.booleans())
+    def test_engine_config_cli_round_trip_prop(tp, top_k, reorder, spec):
+        ec = EngineConfig(top_k=top_k, reorder=reorder, speculative=spec,
+                          mesh=MeshConfig(tp=tp))
+        assert EngineConfig.from_args(_parse(ec.to_cli())) == ec
