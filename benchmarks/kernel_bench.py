@@ -101,6 +101,93 @@ def _paged_decode_rows() -> list:
     return rows
 
 
+def _paged_prefill_rows() -> list:
+    """Dense re-materialization vs paged ragged prefill at serving shapes:
+    one chunked-prefill iteration of B requests, each with a cached prefix
+    resident in the pool.  The dense baseline is the retired steady-state
+    path — gather the prefix pages into a dense (L, 1, pref, KV, hd) cache
+    and run a concat prefill per request (the dense engine runs one request
+    per iteration); the paged path is ONE batched ``paged_prefill_step``
+    reading the prefix pages in place and scattering the chunk KV into its
+    own pages."""
+    rows = []
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    bs = 16
+    B = 4
+    pref = smoke_clamp(256, 48)     # cached prefix tokens per request
+    n = smoke_clamp(64, 16)         # chunk tokens per request
+    reps = smoke_clamp(10, 2)
+    total = pref + n
+    nb_req = -(-total // bs)
+    n_blocks = B * nb_req + 1                       # block 0 = scratch
+    key = jax.random.PRNGKey(3)
+    kp = jax.random.normal(key, (cfg.n_layers, n_blocks, bs, cfg.n_kv_heads,
+                                 cfg.hd), cfg.jdtype)
+    vp = kp * 0.5
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(B, n)).astype(np.int32)
+    tables = np.asarray([[1 + b * nb_req + j for j in range(nb_req)]
+                         for b in range(B)], np.int32)
+    counts = np.full((B, nb_req), bs, np.int32)
+    counts[:, -1] = total - (nb_req - 1) * bs
+    starts = np.asarray([[j * bs for j in range(nb_req)]] * B, np.int32)
+    pos = np.arange(pref, total)
+    wblk = tables[:, pos // bs]
+    wslot = np.tile((pos % bs).astype(np.int32), (B, 1))
+    blk_map = np.repeat(tables, bs, axis=1)[:, :pref]
+    slot_map = np.tile(np.arange(nb_req * bs, dtype=np.int32) % bs,
+                       (B, 1))[:, :pref]
+
+    def dense_one(params, toks_b, blk_b, slot_b, kp, vp):
+        pc = {"k": kp[:, blk_b, slot_b], "v": vp[:, blk_b, slot_b]}
+        logits, _ = M.prefill(cfg, params, {"tokens": toks_b},
+                              prefix_cache=pc, prefix_len=pref)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    def paged_step(params, toks, tables, counts, starts, qs, ql, wblk, wslot,
+                   kp, vp):
+        logits, kp, vp = M.paged_prefill_step(
+            cfg, params, toks, kp, vp, tables, counts, starts, qs, ql,
+            wblk, wslot, attn_impl="jnp")
+        return jnp.argmax(logits[:, 0], axis=-1), kp, vp
+
+    dense = jax.jit(dense_one)
+    paged = jax.jit(paged_step, donate_argnums=(9, 10))
+    args_d = [(jnp.asarray(toks[b:b + 1]), jnp.asarray(blk_map[b:b + 1]),
+               jnp.asarray(slot_map[b:b + 1])) for b in range(B)]
+    args_p = (jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(counts),
+              jnp.asarray(starts), jnp.full((B,), pref, jnp.int32),
+              jnp.full((B,), n, jnp.int32), jnp.asarray(wblk),
+              jnp.asarray(wslot))
+    out_d = jnp.concatenate([dense(params, *a, kp, vp) for a in args_d])
+    out_d.block_until_ready()                       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_d = jnp.concatenate([dense(params, *a, kp, vp) for a in args_d])
+    out_d.block_until_ready()
+    dt_d = (time.perf_counter() - t0) / reps
+    _, kp, vp = paged(params, *args_p, kp, vp)      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_p, kp, vp = paged(params, *args_p, kp, vp)
+    out_p.block_until_ready()
+    dt_p = (time.perf_counter() - t0) / reps
+    if not bool((np.asarray(out_d) == np.asarray(out_p)).all()):
+        # hard-fail the smoke lane, exactly like the decode A/B above
+        raise RuntimeError(
+            f"paged prefill diverged from dense prefill at bench shapes: "
+            f"dense={np.asarray(out_d).tolist()} "
+            f"paged={np.asarray(out_p).tolist()}")
+    gathered = cfg.n_layers * B * pref * cfg.n_kv_heads * cfg.hd
+    rows.append((f"kernel/prefill_dense_gather/B{B}_pref{pref}_n{n}",
+                 dt_d * 1e6, f"dense_elems={gathered} per_iter"))
+    rows.append((f"kernel/prefill_paged/B{B}_pref{pref}_n{n}", dt_p * 1e6,
+                 f"speedup_vs_dense={dt_d / max(dt_p, 1e-12):.2f}x "
+                 f"tokens_match=True"))
+    return rows
+
+
 def run() -> list:
     rows = []
     # VMEM footprint per grid cell for production tile sizes
@@ -137,4 +224,5 @@ def run() -> list:
     rows.append(("kernel/flash_jnp/cpu_wallclock",
                  (time.perf_counter() - t0) / 10 * 1e6, "jit path"))
     rows.extend(_paged_decode_rows())
+    rows.extend(_paged_prefill_rows())
     return rows

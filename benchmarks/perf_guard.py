@@ -30,6 +30,7 @@ TRACKED = (
     "fig_replica/",
     "fig_tp/",
     "fig13_",
+    "kernel/prefill_paged/",
 )
 MAX_RATIO = 2.0
 # smoke rows below this are dominated by fixed overheads; a ratio on a

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import prefix_attention as _pa
 from repro.kernels import paged_attention as _pg
+from repro.kernels import paged_prefill as _pp
 
 
 def _on_tpu() -> bool:
@@ -25,12 +26,13 @@ def _on_tpu() -> bool:
 def prefix_attention(q, k, v, *, prefix_len: int, window: int = 0,
                      block_q: int = 128, block_k: int = 128,
                      interpret: bool | None = None):
-    """Flash prefill over [cached prefix ‖ new] KV. Layouts:
+    """Flash prefill over dense [cached prefix ‖ new] KV (the A/B baseline;
+    the paged engine uses ``paged_prefill_attention``). Layouts:
     q: (B, H, Sq, hd); k/v: (B, KV, prefix_len + Sq, hd)."""
     interp = (not _on_tpu()) if interpret is None else interpret
-    return _pa.prefix_attention(q, k, v, prefix_len=prefix_len,
-                                window=window, block_q=block_q,
-                                block_k=block_k, interpret=interp)
+    return _pa.prefix_flash_attention(q, k, v, prefix_len=prefix_len,
+                                      window=window, block_q=block_q,
+                                      block_k=block_k, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -113,4 +115,67 @@ def _paged_decode_sharded(q, k_pages, v_pages, tables, counts, starts, qpos,
                   rep2, rep2, rep2, P(None), P(), P()),
         out_specs=P(None, axis, None), check_rep=False)
     return fn(q, k_pages, v_pages, tables, counts, starts, qpos,
+              jnp.asarray(layer, jnp.int32), jnp.asarray(window, jnp.int32))
+
+
+def paged_prefill_attention(q, k_pages, v_pages, tables, counts, starts,
+                            q_start, q_len, layer, window, *,
+                            logit_cap: float = 0.0, impl: str | None = None,
+                            mesh=None, axis: str = "model"):
+    """Ragged prefill attention straight from the pool's layer-major page
+    arrays — the prefill twin of ``paged_decode_attention``, same dispatch
+    table (None -> pallas on TPU / jnp on CPU; "pallas" / "interpret" /
+    "jnp" to force), same run-table contract, plus the per-request
+    ``q_start``/``q_len`` query-row contract (see paged_prefill.py).
+
+    Not jit-wrapped: called per-layer inside the (already jitted) prefill
+    step's layer scan, where ``layer``/``window`` are traced values.
+
+    ``mesh``: as for decode — jnp partitions via GSPMD on its own; the
+    pallas/interpret paths dispatch the kernel per shard over head-local
+    tiles with replicated run tables.
+    """
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        return _pp.paged_prefill_jnp(q, k_pages, v_pages, tables, counts,
+                                     starts, q_start, q_len, layer, window,
+                                     logit_cap=logit_cap)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown paged-attention impl {impl!r}")
+    if mesh is not None and mesh.shape.get(axis, 1) > 1:
+        return _paged_prefill_sharded(q, k_pages, v_pages, tables, counts,
+                                      starts, q_start, q_len, layer, window,
+                                      logit_cap=logit_cap,
+                                      interpret=impl == "interpret",
+                                      mesh=mesh, axis=axis)
+    return _pp.paged_prefill_attention(q, k_pages, v_pages, tables, counts,
+                                       starts, q_start, q_len, layer, window,
+                                       logit_cap=logit_cap,
+                                       interpret=impl == "interpret")
+
+
+def _paged_prefill_sharded(q, k_pages, v_pages, tables, counts, starts,
+                           q_start, q_len, layer, window, *, logit_cap: float,
+                           interpret: bool, mesh, axis: str):
+    """Per-shard Pallas dispatch for prefill: identical scheme to
+    ``_paged_decode_sharded`` with the extra Sq query axis riding along
+    unsharded — prefill attention is embarrassingly parallel over heads."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_l, kp_l, vp_l, tb, cn, st, qs, ql, li, w):
+        return _pp.paged_prefill_attention(q_l, kp_l, vp_l, tb, cn, st, qs,
+                                           ql, li, w, logit_cap=logit_cap,
+                                           interpret=interpret)
+
+    rep2 = P(None, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, axis, None, None),
+                  P(None, None, None, axis, None),
+                  P(None, None, None, axis, None),
+                  rep2, rep2, rep2, P(None), P(None), P(), P()),
+        out_specs=P(None, axis, None, None), check_rep=False)
+    return fn(q, k_pages, v_pages, tables, counts, starts, q_start, q_len,
               jnp.asarray(layer, jnp.int32), jnp.asarray(window, jnp.int32))

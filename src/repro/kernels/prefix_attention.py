@@ -1,8 +1,11 @@
-"""Pallas TPU kernel: prefix-cached prefill attention.
+"""Pallas TPU kernel: prefix-cached prefill attention over dense [prefix ‖ new].
 
-This is the TPU-native replacement for RAGCache's Triton prefill-kernel
+This was the TPU-native replacement for RAGCache's Triton prefill-kernel
 extension of vLLM (paper §6): queries of the *new* tokens (question + fresh
 documents) attend over the concatenation [cached document KV ‖ new KV].
+Since the paged ragged prefill kernel (``paged_prefill.py``) landed, the
+serving runtime no longer gathers that dense concatenation — this kernel
+remains as the dense A/B baseline (``--attn dense``) and a parity oracle.
 
 Design (docs/ARCHITECTURE.md §3, hardware adaptation):
   * grid = (batch, q_head, q_blocks, kv_blocks), kv innermost; the online-
@@ -14,7 +17,13 @@ Design (docs/ARCHITECTURE.md §3, hardware adaptation):
     ``h // (H // KV)`` — the repeated KV stream is never materialized;
   * causal masking applies only past the prefix boundary: every kv position
     < prefix_len is unmasked by construction (q positions start at
-    prefix_len), so prefix blocks skip mask evaluation entirely.
+    prefix_len), so a kv block that is *entirely* at-or-before the q block's
+    first position — the whole cached prefix, plus the already-seen bulk of
+    the new tokens — takes a ``pl.when`` fast path that skips mask
+    construction; only diagonal blocks (and window-edge blocks) pay for the
+    iota/compare/select.  The two branches are bitwise-equivalent on full
+    blocks (a mask of all-True selects ``s`` unchanged), pinned by
+    ``tests/test_paged_prefill.py``.
 
 Validated against ``ref.reference_prefix_attention`` in interpret mode
 (CPU); compiled path targets TPU v5e.
@@ -29,6 +38,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _accumulate(s, v, acc_ref, m_ref, l_ref):
+    """One online-softmax update of the VMEM accumulator with scores ``s``."""
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
@@ -51,23 +72,29 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         preferred_element_type=jnp.float32) * scale      # (bq, bk)
 
     iq = pl.program_id(2)
-    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0)
-    k_pos = ik * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 1)
-    mask = k_pos <= q_pos
+    # a kv block is mask-free iff its LAST position is causally visible to
+    # the q block's FIRST row (which also bounds it inside the un-padded kv
+    # range: q_offset + iq*block_q <= Skv - 1) and, under a sliding window,
+    # its FIRST position is inside the window of the q block's LAST row
+    full = (ik + 1) * block_k - 1 <= q_offset + iq * block_q
     if window > 0:
-        mask &= k_pos > q_pos - window
-    s = jnp.where(mask, s, NEG_INF)
+        full &= ik * block_k > q_offset + iq * block_q + block_q - 1 - window
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    @pl.when(full)
+    def _unmasked():
+        # prefix fast path: no iota, no compare, no select
+        _accumulate(s, v, acc_ref, m_ref, l_ref)
+
+    @pl.when(jnp.logical_not(full))
+    def _masked():
+        q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        _accumulate(jnp.where(mask, s, NEG_INF), v, acc_ref, m_ref, l_ref)
 
     @pl.when(ik == n_kv_blocks - 1)
     def _finalize():
@@ -76,7 +103,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                        ).astype(o_ref.dtype)
 
 
-def prefix_attention(
+def prefix_flash_attention(
     q: jax.Array,              # (B, H, Sq, hd)  — new tokens
     k: jax.Array,              # (B, KV, Skv, hd) — [prefix ‖ new] keys
     v: jax.Array,              # (B, KV, Skv, hd)
@@ -99,8 +126,10 @@ def prefix_attention(
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-    # padded kv columns must never win the max: they are masked by causality
-    # only if beyond q_pos; guard explicitly by masking k_pos >= Skv
+    # padded kv columns must never win the max: they sit past every valid
+    # q position, so causal masking kills them — and the fast path never
+    # fires on a block containing them (its predicate bounds the block's
+    # last position by a valid q position < Skv)
     nq = qp.shape[2] // block_q
     nk = kp.shape[2] // block_k
 
@@ -130,3 +159,15 @@ def prefix_attention(
         interpret=interpret,
     )(qp, kp, vp)
     return out[:, :, :Sq]
+
+
+def prefix_attention(q, k, v, *, prefix_len: int, window: int = 0,
+                     block_q: int = 128, block_k: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """Deprecated name — use :func:`prefix_flash_attention` (same signature,
+    same semantics).  Kept as a thin forwarder so external callers of the
+    pre-PR-8 API keep working; scheduled for removal once the dense A/B
+    baseline goes."""
+    return prefix_flash_attention(q, k, v, prefix_len=prefix_len,
+                                  window=window, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

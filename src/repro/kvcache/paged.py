@@ -197,6 +197,27 @@ class PagedKVStore:
         seg.n_tokens += T
         return seg
 
+    def extend_alloc(self, seg: "PagedSegment",
+                     n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Reserve capacity for ``n`` more tokens WITHOUT writing data —
+        the paged prefill kernel scatters KV into the pool in place, so the
+        store only needs to hand out the (block, slot) coordinates.
+
+        Mutates ``seg`` (blocks list + n_tokens) and returns int32
+        ``(blk, slot)`` arrays of shape (n,) for the new token positions.
+        Raises ``OutOfBlocks`` (leaving ``seg`` unchanged — ``alloc`` checks
+        capacity before mutating anything) if the pool cannot hold them.
+        """
+        capacity = len(seg.blocks) * self.block_size
+        need = (seg.n_tokens + n) - capacity
+        if need > 0:
+            seg.blocks.extend(self.pool.alloc(self.pool.blocks_for_tokens(need)))
+        pos = np.arange(seg.n_tokens, seg.n_tokens + n)
+        blk = np.asarray(seg.blocks, np.int64)[pos // self.block_size]
+        slot = pos % self.block_size
+        seg.n_tokens += n
+        return blk.astype(np.int32), slot.astype(np.int32)
+
     def gather(self, seg: "PagedSegment"):
         """Paged -> contiguous (L, 1, T, KV, hd)."""
         idx = (jnp.asarray(seg.blocks) if self.device

@@ -115,6 +115,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tokens per prefill chunk (0 = unchunked); applies "
                          "to BOTH engines so --check-tokens compares "
                          "identically chunked computations")
+    ap.add_argument("--max-prefill-bs", type=int, default=4,
+                    help="row slots of the ragged paged-prefill batch "
+                         "(continuous paged mode; jit retraces per "
+                         "power-of-two chunk bucket above this floor)")
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="ragged prefill-batch token budget per engine "
                          "iteration (0 = one request per iteration; "
@@ -123,12 +127,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="paged-KV block size in tokens (continuous mode)")
     ap.add_argument("--attn", default="auto",
                     choices=["dense", "paged", "auto"],
-                    help="continuous-mode decode attention engine: 'paged' "
-                         "attends straight from the pool's page arrays "
-                         "(Pallas kernel on TPU, per-page jnp online "
-                         "softmax on CPU; O(live tokens) per iteration); "
-                         "'dense' re-materializes the full (L, B, S, KV, "
-                         "hd) context every iteration (A/B baseline); 'auto' "
+                    help="continuous-mode attention engine for BOTH prefill "
+                         "and decode: 'paged' computes straight against the "
+                         "pool's page arrays (Pallas kernels on TPU, "
+                         "per-page jnp online softmax on CPU) — prefill "
+                         "scatters new KV into pages in place and decode "
+                         "reads O(live tokens) per iteration, no dense KV "
+                         "gather anywhere in steady state; 'dense' "
+                         "re-materializes the full (L, B, S, KV, hd) "
+                         "context every iteration (A/B baseline); 'auto' "
                          "= paged.  Greedy tokens are bit-identical across "
                          "modes; the sequential engine is always dense")
     ap.add_argument("--rate", type=float, default=100.0,

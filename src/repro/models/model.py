@@ -592,6 +592,71 @@ def paged_decode_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
     return lm_logits(cfg, params, x), k_pages, v_pages
 
 
+def paged_prefill_step(cfg: ModelConfig, params, tokens, k_pages, v_pages,
+                       tables, counts, starts, q_start, q_len, write_blk,
+                       write_slot, *, attn_impl: str | None = None,
+                       mesh=None):
+    """One ragged prefill chunk computed straight against the paged pool —
+    the prefill twin of ``paged_decode_step`` (no dense (L, B, S, KV, hd)
+    gather, no per-chunk dense KV to re-page afterwards).
+
+    tokens: (B, Sq) right-padded chunk token rows; row ``b`` holds
+    ``q_len[b]`` valid tokens whose first sits at absolute position
+    ``q_start[b]``.  k_pages/v_pages: the ``PagedKVStore`` buffers,
+    (L, n_blocks, block, KV, hd).  tables/counts/starts: (B, n_slots) run
+    descriptors covering the cached prefix PLUS this chunk's freshly
+    allocated pages (counts include the chunk's own tokens — causal masking
+    over absolute positions keeps later rows from seeing earlier garbage).
+    write_blk/write_slot: (B, Sq) page coordinates for every chunk token —
+    KV is scattered in place per layer BEFORE attention; padding rows point
+    at the store's scratch block, which no live run ever reads.
+
+    Returns (logits, k_pages, v_pages) with logits (B, 1, V) taken at each
+    row's LAST VALID token, so the final chunk's call yields the first-token
+    logits directly.  Attention families only — recurrent state cannot be
+    paged per-block.
+
+    mesh: tensor-parallel serving — forwarded to the attention dispatch
+    (per-shard Pallas via shard_map; the jnp path ignores it and lets GSPMD
+    partition the sharded-KV einsums itself).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("paged prefill requires per-token KV; "
+                         "ssm/hybrid families use prefill")
+    from repro.kernels import ops
+
+    x = embed_inputs(cfg, params, {"tokens": tokens})
+    B, Sq = tokens.shape
+    windows = _layer_windows_arr(cfg)
+    positions = q_start[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
+
+    def body(carry, xs):
+        x, kp, vp = carry
+        p, w, li = xs
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, h)                          # (B, Sq, ., hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kp = kp.at[li, write_blk, write_slot].set(k.astype(kp.dtype))
+        vp = vp.at[li, write_blk, write_slot].set(v.astype(vp.dtype))
+        o = ops.paged_prefill_attention(
+            q.transpose(0, 2, 1, 3), kp, vp, tables, counts, starts,
+            q_start, q_len, li, w, logit_cap=cfg.attn_logit_softcap,
+            impl=attn_impl, mesh=mesh)
+        x = x + L.dense_rowsum(o.transpose(0, 2, 1, 3).reshape(B, Sq, -1),
+                               p["wo"])
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + _ffn(cfg, p, h2)
+        return (x, kp, vp), None
+
+    (x, k_pages, v_pages), _ = lax.scan(
+        body, (x, k_pages, v_pages),
+        (params["blocks"], windows, jnp.arange(cfg.n_layers)))
+    last = jnp.clip(q_len - 1, 0, Sq - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return lm_logits(cfg, params, x_last), k_pages, v_pages
+
+
 def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
     """One decode iteration.
 

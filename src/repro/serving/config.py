@@ -73,6 +73,7 @@ class EngineConfig:
     reorder: bool = True
     speculative: bool = True
     max_batch: int = 4
+    max_prefill_bs: int = 4
     prefill_chunk: int = 0
     max_prefill_tokens: int = 0
     block_size: int = 16
@@ -93,6 +94,7 @@ class EngineConfig:
             reorder=not args.no_reorder,
             speculative=not args.no_spec,
             max_batch=args.max_batch,
+            max_prefill_bs=getattr(args, "max_prefill_bs", 4),
             prefill_chunk=args.prefill_chunk,
             max_prefill_tokens=args.max_prefill_tokens,
             block_size=args.block_size,
@@ -107,6 +109,7 @@ class EngineConfig:
                "--disk-cache-bytes", str(self.disk_cache_bytes),
                "--policy", self.policy, "--top-k", str(self.top_k),
                "--max-batch", str(self.max_batch),
+               "--max-prefill-bs", str(self.max_prefill_bs),
                "--prefill-chunk", str(self.prefill_chunk),
                "--max-prefill-tokens", str(self.max_prefill_tokens),
                "--block-size", str(self.block_size), "--attn", self.attn,

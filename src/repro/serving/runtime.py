@@ -78,7 +78,7 @@ from repro.core.knowledge_tree import (CacheBackend, EvictionError,
 from repro.core.profiler import CostProfiler
 from repro.core.speculative import SpecState, SpeculativeController
 from repro.kvcache.paged import (DiskSegmentStore, OutOfBlocks, PagedKVStore,
-                                 make_disk_store)
+                                 PagedSegment, make_disk_store)
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.sharding import (assert_tp_compatible, pool_kv_spec,
                                    serving_param_shardings)
@@ -182,7 +182,8 @@ class ShardedPagedBackend(PagedBackend):
 @dataclasses.dataclass
 class _PrefillResult:
     docs: Tuple[int, ...]
-    cache: dict                     # dense full-sequence cache (L, 1, T, ...)
+    cache: Optional[dict]           # dense full-sequence cache (L, 1, T, ...)
+                                    # — None in paged-prefill mode
     first_token: int
     total_len: int
     alpha: int
@@ -191,6 +192,15 @@ class _PrefillResult:
     hit_tier_tokens: Tuple[int, int, int]   # alpha split by (gpu, host, disk)
     speculative: bool
     started: float
+    # paged-prefill mode: the computed KV already lives in the pool — the
+    # result holds the page coordinates, not a dense copy.  hit_runs are
+    # (blocks, n_tokens) snapshots of the shared (incref'd) prefix nodes;
+    # pg_segs are the request-owned segments (uncached docs + question), in
+    # sequence order.  Both lists are emptied when _paginate consumes them
+    # (ownership transfers to the decode table) or _free_paged_kv drops them.
+    hit_runs: List[Tuple[List[int], int]] = dataclasses.field(
+        default_factory=list)
+    pg_segs: List[PagedSegment] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -208,9 +218,17 @@ class _ChunkState:
     plen: int = 0                   # absolute tokens prefixed so far
     prefix_hit: Optional[dict] = None  # dense cached-prefix KV (alpha tokens)
     partial_seg: Optional[object] = None  # PagedSegment of computed tokens
+                                          # (dense mode only)
     cache: Optional[dict] = None    # dense full-seq cache, set when the
                                     # last piece completes (commit/paginate)
     logits: Optional[object] = None
+    # paged-prefill mode: no dense KV at all.  hit_runs snapshot the shared
+    # (pinned + incref'd) prefix nodes' pages; pg_segs hold one (initially
+    # empty) segment per to-compute segment in ``segs`` — the kernel
+    # scatters each chunk's KV straight into their freshly allocated pages.
+    hit_runs: List[Tuple[List[int], int]] = dataclasses.field(
+        default_factory=list)
+    pg_segs: List[PagedSegment] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -301,6 +319,7 @@ class ContinuousRuntime:
             reorder = config.reorder
             speculative = config.speculative
             max_batch = config.max_batch
+            max_prefill_bs = config.max_prefill_bs
             prefill_chunk = config.prefill_chunk
             max_prefill_tokens = config.max_prefill_tokens
             block_size = config.block_size
@@ -386,6 +405,15 @@ class ContinuousRuntime:
             lambda p, toks, pc, pl: M.prefill(cfg, p, {"tokens": toks},
                                               prefix_cache=pc, prefix_len=pl),
             static_argnames=("pl",))
+        # paged-prefill step: ragged chunk rows computed straight against
+        # the (donated) pool planes — jit retraces per (B, Sq) bucket, like
+        # the dense prefill retraces per (prefix_len, piece) shape
+        _impl, _tp_mesh = attn_impl, self._mesh
+        self._paged_prefill_fn = jax.jit(
+            lambda p, toks, tb, cn, sts, qs, ql, wb, ws, kp, vp:
+            M.paged_prefill_step(cfg, p, toks, kp, vp, tb, cn, sts, qs, ql,
+                                 wb, ws, attn_impl=_impl, mesh=_tp_mesh),
+            donate_argnums=(9, 10), **self._decode_jit_kw())
         self._decode_fn = None        # built in serve() once n_slots is known
         self._n_slots = 0
         self._n_tbl = 0               # run-table width (paged mode)
@@ -616,7 +644,9 @@ class ContinuousRuntime:
         victim.state = WAITING
         victim.tokens = []
         victim.remaining = self.max_new_tokens
-        victim.results.pop(victim.final_docs, None)
+        stale_res = victim.results.pop(victim.final_docs, None)
+        if stale_res is not None:
+            self._free_paged_kv(stale_res)
         victim.tl.first_token = -1.0    # recompute re-emits the first token
         victim.tl.token_times = []
         victim.tl.preemptions += 1
@@ -640,6 +670,7 @@ class ContinuousRuntime:
         t0 = time.perf_counter()
         outcomes = []                  # (job, finished)
         executed = 0
+        rows = []                      # paged mode: packed chunk rows
         for ch in chunks:
             job = ch.item
             if not self._job_viable(job):
@@ -651,12 +682,24 @@ class ContinuousRuntime:
                 continue
             if job.cs is None:
                 self._begin_chunked(job)
-            n = self._run_chunk(job)
-            if n < 0:
-                continue               # paged partial hit OutOfBlocks: job
+            if self.attn == "paged":
+                row = self._prep_paged_chunk(job)
+                if row is None:
+                    continue           # OutOfBlocks: job aborted + requeued
+                rows.append(row)
+                executed += row[-1]
+            else:
+                n = self._run_chunk(job)
+                if n < 0:
+                    continue           # paged partial hit OutOfBlocks: job
                                        # was aborted + requeued in-place
-            executed += n
+                executed += n
             outcomes.append((job, not job.cs.pieces))
+        if rows:
+            # ONE ragged batched call for every packed chunk — the batch is
+            # row-independent (padding rows fully masked), so tokens are
+            # identical whatever shares the iteration
+            self._run_paged_rows(rows)
         dt = time.perf_counter() - t0
         if outcomes:
             # all-stale batches (every chunk went stale in this event-loop
@@ -689,10 +732,25 @@ class ContinuousRuntime:
             raise ValueError(
                 f"request {st.r.req_id}: nothing to prefill (empty question "
                 f"and fully cached documents) — no logits can be produced")
-        prefix_hit, plen = self._assemble_prefix(plan.hit_nodes)
-        job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
-                             pieces=pieces, total=sum(pieces),
-                             plen=plen, prefix_hit=prefix_hit)
+        if self.attn == "paged":
+            # no dense gather of the hit prefix: snapshot its page runs and
+            # refcount-share them (the nodes are also pinned until commit,
+            # so the pages can be read in place for the whole prefill)
+            hit_runs, plen = [], 0
+            for node in plan.hit_nodes:
+                seg = node.payload_gpu
+                self.store.share(seg)
+                hit_runs.append((list(seg.blocks), seg.n_tokens))
+                plen += seg.n_tokens
+            job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
+                                 pieces=pieces, total=sum(pieces), plen=plen)
+            job.cs.hit_runs = hit_runs
+            job.cs.pg_segs = [PagedSegment(self.store, [], 0) for _ in segs]
+        else:
+            prefix_hit, plen = self._assemble_prefix(plan.hit_nodes)
+            job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
+                                 pieces=pieces, total=sum(pieces),
+                                 plen=plen, prefix_hit=prefix_hit)
         self._partial_jobs.append(job)
 
     def _chunk_prefix(self, cs: _ChunkState) -> Tuple[Optional[dict], int]:
@@ -759,6 +817,112 @@ class ContinuousRuntime:
                 return -1
         return n
 
+    # ---- paged ragged prefill (no dense KV at any point) ---------------
+
+    def _prep_paged_chunk(self, job: _Job):
+        """Allocate pages for the next piece of ``job`` and build its row of
+        the ragged batch: chunk tokens, their (block, slot) write coords,
+        and the run table covering cached prefix + everything computed so
+        far INCLUDING this chunk (causal masking over absolute positions
+        keeps row i from seeing slots past it).  Returns None if the pool
+        cannot hold the piece (job aborted + requeued in place)."""
+        cs = job.cs
+        n = cs.pieces.pop(0)
+        q_start = cs.plen
+        toks = np.zeros(n, np.int32)
+        wblk = np.full(n, self._scratch_block, np.int32)
+        wslot = np.zeros(n, np.int32)
+        off, left = 0, n
+        while left > 0:
+            seg = cs.segs[cs.seg_idx]
+            pg = cs.pg_segs[cs.seg_idx]
+            take = min(left, len(seg) - cs.seg_off)
+            need = (self.store.pool.blocks_for_tokens(pg.n_tokens + take)
+                    - len(pg.blocks))
+            if need > 0 and not self._reclaim_blocks(need):
+                self._abort_chunked(job, requeue=True)
+                return None
+            try:
+                blk, slot = self.store.extend_alloc(pg, take)
+            except OutOfBlocks:
+                self._abort_chunked(job, requeue=True)
+                return None
+            toks[off:off + take] = seg[cs.seg_off:cs.seg_off + take]
+            wblk[off:off + take] = blk
+            wslot[off:off + take] = slot
+            cs.seg_off += take
+            off += take
+            left -= take
+            while cs.seg_idx < len(cs.segs) and \
+                    cs.seg_off >= len(cs.segs[cs.seg_idx]):
+                cs.seg_idx += 1
+                cs.seg_off = 0
+        cs.plen += n
+        tables, counts, starts = self._paged_chunk_row(cs)
+        return (job, toks, wblk, wslot, q_start, tables, counts, starts, n)
+
+    def _paged_chunk_row(self, cs: _ChunkState):
+        """Run-table row over [hit runs ‖ computed segments], same contract
+        as decode (kernels/paged_attention.py): every segment starts at
+        slot 0 of a fresh block, so runs are exactly the per-block spans."""
+        T = self._n_tbl
+        bs = self.store.block_size
+        tables = np.full(T, self._scratch_block, np.int32)
+        counts = np.zeros(T, np.int32)
+        starts = np.zeros(T, np.int32)
+        j, pos = 0, 0
+        runs = cs.hit_runs + [(pg.blocks, pg.n_tokens) for pg in cs.pg_segs]
+        for blocks, ntok in runs:
+            for bi, blk in enumerate(blocks):
+                c = min(bs, ntok - bi * bs)
+                if c <= 0:
+                    break
+                tables[j] = blk
+                counts[j] = c
+                starts[j] = pos
+                pos += c
+                j += 1
+        assert j <= T, (j, T)
+        return tables, counts, starts
+
+    def _run_paged_rows(self, rows) -> None:
+        """Execute one ragged batched paged-prefill iteration.  Rows pad to
+        ``max_prefill_bs`` and chunk lengths to a power-of-two bucket (>= 8)
+        to bound jit retraces; padding rows/tokens write into the scratch
+        block and are fully masked (q_len), so every real row's output —
+        and therefore every token — is independent of what shares the
+        batch."""
+        B = max(self.sched.config.max_prefill_bs, len(rows))
+        Sq = max(8, 1 << (max(r[-1] for r in rows) - 1).bit_length())
+        T = self._n_tbl
+        toks = np.zeros((B, Sq), np.int32)
+        wblk = np.full((B, Sq), self._scratch_block, np.int32)
+        wslot = np.zeros((B, Sq), np.int32)
+        tables = np.full((B, T), self._scratch_block, np.int32)
+        counts = np.zeros((B, T), np.int32)
+        starts = np.zeros((B, T), np.int32)
+        q_start = np.zeros((B,), np.int32)
+        q_len = np.zeros((B,), np.int32)
+        for i, (job, t, wb, ws, qs, tb, cn, st_, n) in enumerate(rows):
+            toks[i, :n] = t
+            wblk[i, :n] = wb
+            wslot[i, :n] = ws
+            tables[i] = tb
+            counts[i] = cn
+            starts[i] = st_
+            q_start[i] = qs
+            q_len[i] = n
+        with self._trace_ctx():
+            logits, self.store.k, self.store.v = self._paged_prefill_fn(
+                self.params, jnp.asarray(toks), jnp.asarray(tables),
+                jnp.asarray(counts), jnp.asarray(starts),
+                jnp.asarray(q_start), jnp.asarray(q_len),
+                jnp.asarray(wblk), jnp.asarray(wslot),
+                self.store.k, self.store.v)
+        logits = jax.block_until_ready(logits)
+        for i, row in enumerate(rows):
+            row[0].cs.logits = logits[i:i + 1]       # (1, 1, V)
+
     def _on_prefill_batch_done(self, payload) -> None:
         self.engine_busy = False
         for job, finished in payload:
@@ -775,6 +939,11 @@ class ContinuousRuntime:
                 continue
             # prefill complete
             self.sched.note_chunk_done(job, [])
+            pg_segs, hit_runs = cs.pg_segs, cs.hit_runs
+            if not stale:
+                # ownership of the paged state moves to the result BEFORE
+                # _drop_chunk_state (which frees whatever is still attached)
+                cs.pg_segs, cs.hit_runs = [], []
             self._drop_chunk_state(job)
             if stale:
                 for n in cs.plan.hit_nodes:   # unpin without committing
@@ -788,10 +957,14 @@ class ContinuousRuntime:
                 alpha=cs.plan.alpha, beta=cs.plan.beta,
                 hit_docs=cs.plan.hit_docs,
                 hit_tier_tokens=cs.plan.hit_tier_tokens,
-                speculative=job.speculative, started=job.started)
-            payloads = [(start, length, cs.cache)
-                        for start, length in cs.doc_bounds]
-            self._commit_payloads(cs.plan, payloads)
+                speculative=job.speculative, started=job.started,
+                hit_runs=hit_runs, pg_segs=pg_segs)
+            if self.attn == "paged":
+                self._commit_paged(cs.plan, pg_segs[:len(cs.doc_bounds)])
+            else:
+                payloads = [(start, length, cs.cache)
+                            for start, length in cs.doc_bounds]
+                self._commit_payloads(cs.plan, payloads)
             st.results[job.docs] = res
             if st.final_docs is not None and job.docs == st.final_docs:
                 self._first_token(st, res, max(self.now, st.tl.search_end))
@@ -799,12 +972,26 @@ class ContinuousRuntime:
 
     def _drop_chunk_state(self, job: _Job) -> None:
         cs = job.cs
-        if cs is not None and cs.partial_seg is not None:
-            self.store.free(cs.partial_seg)
-            cs.partial_seg = None
+        if cs is not None:
+            if cs.partial_seg is not None:
+                self.store.free(cs.partial_seg)
+                cs.partial_seg = None
+            self._free_paged_kv(cs)
         job.cs = None
         if job in self._partial_jobs:
             self._partial_jobs.remove(job)
+
+    def _free_paged_kv(self, holder) -> None:
+        """Drop a _ChunkState's or _PrefillResult's paged KV references:
+        release the shared hit runs (one incref each) and free the owned
+        segments.  No-op once ownership has transferred (lists emptied)."""
+        for blocks, _ in holder.hit_runs:
+            self.store.release(blocks)
+        holder.hit_runs = []
+        for pg in holder.pg_segs:
+            if pg.blocks:
+                self.store.free(pg)
+        holder.pg_segs = []
 
     def _abort_chunked(self, job: _Job, requeue: bool = False) -> None:
         """Mid-prefill cancellation: free the partial KV, unpin the hit
@@ -854,6 +1041,21 @@ class ContinuousRuntime:
         for seg in segs:
             if id(seg) not in kept:
                 self.store.free(seg)
+
+    def _commit_paged(self, plan, doc_segs) -> None:
+        """Paged twin of ``_commit_payloads``: the per-doc KV already lives
+        in pool blocks (the prefill kernel scattered it in place), so
+        committing is pure refcounting — share each segment to mint the
+        tree's independent reference, then drop it again for every segment
+        the tree declined (duplicate doc path or insert stopped early)."""
+        for seg in doc_segs:
+            self.store.share(seg)
+        inserted = self.controller.commit(
+            plan, list(doc_segs), max_docs=len(plan.hit_nodes) + len(doc_segs))
+        kept = {id(n.payload_gpu) for n in inserted}
+        for seg in doc_segs:
+            if id(seg) not in kept:
+                self.store.release(seg.blocks)
 
     def _reclaim_blocks(self, needed: int) -> bool:
         """Evict unpinned tree leaves (PGDSF order, shared Alg. 1 loop)
@@ -909,7 +1111,9 @@ class ContinuousRuntime:
         self.running.append(st)
 
     def _requeue_after_pagination_failure(self, st: _ReqRun) -> None:
-        st.results.pop(st.final_docs, None)
+        res = st.results.pop(st.final_docs, None)
+        if res is not None:
+            self._free_paged_kv(res)
         st.tokens = []
         st.tl.first_token = -1.0       # not actually servable yet
         self._force_decode = True      # guarantee decode progress before
@@ -928,6 +1132,8 @@ class ContinuousRuntime:
         and the next doc's tokens simply start in a fresh block — and copy
         the rest (uncached docs + question) into private blocks with decode
         reserve."""
+        if self.attn == "paged" and (res.pg_segs or res.hit_runs):
+            return self._paginate_paged(st, res)
         bs = self.store.block_size
         pos_blk: List[int] = []
         pos_slot: List[int] = []
@@ -964,6 +1170,46 @@ class ContinuousRuntime:
         st.length = res.total_len
         self.metrics.blocks_shared += len(shared)
         self.metrics.blocks_copied += len(priv.blocks)
+        return True
+
+    def _paginate_paged(self, st: _ReqRun, res: _PrefillResult) -> bool:
+        """Paged twin of ``_paginate``: every token already sits in a pool
+        block — the cached prefix in the shared hit runs, the rest in the
+        result's owned segments — so building the decode slot mapping is
+        pure bookkeeping plus one allocation-only extension of the question
+        segment for the decode reserve.  On success the result's references
+        transfer wholesale to ``st.owned_blocks`` (lists emptied); on
+        failure ``res`` is left untouched for the requeue path to free."""
+        bs = self.store.block_size
+        qseg = res.pg_segs[-1]
+        need = (self.store.pool.blocks_for_tokens(qseg.n_tokens + st.remaining)
+                - len(qseg.blocks))
+        if need > 0 and not self._reclaim_blocks(need):
+            return False
+        try:
+            self.store.extend_alloc(qseg, st.remaining)
+        except OutOfBlocks:
+            return False
+        pos_blk: List[int] = []
+        pos_slot: List[int] = []
+        shared: List[int] = []
+        owned: List[int] = []
+        for blocks, n_tokens in res.hit_runs:
+            for i in range(n_tokens):
+                pos_blk.append(blocks[i // bs])
+                pos_slot.append(i % bs)
+            shared.extend(blocks)
+        for pg in res.pg_segs:
+            for i in range(pg.n_tokens):
+                pos_blk.append(pg.blocks[i // bs])
+                pos_slot.append(i % bs)
+            owned.extend(pg.blocks)
+        st.pos_blk, st.pos_slot = pos_blk, pos_slot
+        st.owned_blocks = shared + owned
+        st.length = res.total_len
+        self.metrics.blocks_shared += len(shared)
+        self.metrics.blocks_copied += len(owned)
+        res.pg_segs, res.hit_runs = [], []    # ownership moved to the table
         return True
 
     def _release_table(self, st: _ReqRun) -> None:
@@ -1157,7 +1403,10 @@ class ContinuousRuntime:
         st.tl.tokens = list(st.tokens)
         for job in st.jobs:
             job.cancelled = True
-        # drop the dense prefill caches (incl. wasted speculations) — the
-        # paged store/tree is the only KV owner after a request completes
+        # drop the prefill results (incl. wasted speculations) — the paged
+        # store/tree is the only KV owner after a request completes; paged
+        # results still hold refcounts that must be returned to the pool
+        for res in st.results.values():
+            self._free_paged_kv(res)
         st.results = {}
         st.jobs = []

@@ -57,6 +57,42 @@ def test_main_check_tokens_paged_attn_three_replicas(monkeypatch, capsys):
     assert "token check: all 4 requests identical" in out
 
 
+def test_main_check_tokens_paged_prefill_chunked(monkeypatch, capsys):
+    """--attn paged --prefill-chunk: chunked ragged prefill scatters KV
+    straight into pool pages (no dense gather anywhere), and greedy tokens
+    stay bit-identical to the dense sequential engine."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--check-tokens", "--attn", "paged",
+                     "--prefill-chunk", "6"])
+    assert "token check: all 4 requests identical" in out
+
+
+def test_main_check_tokens_paged_prefill_three_replicas(monkeypatch, capsys):
+    """--attn paged --prefill-chunk at N=3: every replica prefills AND
+    decodes through the paged kernels; the fleet still matches the single
+    dense sequential engine exactly."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--check-tokens", "--attn", "paged",
+                     "--prefill-chunk", "6", "--replicas", "3"])
+    assert "continuous x3 (affinity)" in out
+    assert "token check: all 4 requests identical" in out
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    jax.local_device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+           "set before jax import (CI multidevice lane)")
+def test_main_check_tokens_paged_prefill_tp2(monkeypatch, capsys):
+    """--tp 2 --attn paged --prefill-chunk: the sharded paged-prefill path
+    (per-shard kernel dispatch over head-local pool planes) keeps greedy
+    tokens bit-identical to the unsharded dense sequential engine."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--check-tokens", "--attn", "paged",
+                     "--prefill-chunk", "6", "--tp", "2"])
+    assert "token check: all 4 requests identical" in out
+
+
 def test_main_sequential_only(monkeypatch, capsys):
     out = _run_main(monkeypatch, capsys, ["--sequential"])
     assert "[sequential] served 4 requests" in out
