@@ -5,7 +5,10 @@ compares the current run against the previous main artifact (when one can
 be downloaded) and fails on a >``max_ratio`` regression of the tracked
 smoke-TTFT rows.  Tolerant by design:
 
-  * no baseline (first run, expired artifact, download failed) -> pass;
+  * no baseline (first run, expired artifact, download failed) -> pass,
+    but LOUDLY: a ``::warning::`` annotation + step-summary line name the
+    missing baseline so a broken artifact upload can't mute the gate
+    silently;
   * rows missing from either side (benchmarks added/removed) -> ignored;
   * error/system rows (``*/ERROR``, ``*/_total`` wall times) -> ignored —
     wall time on a shared runner is noise, the analytic simulator TTFTs
@@ -21,6 +24,7 @@ Usage (what ci.yml runs):
 from __future__ import annotations
 
 import json
+import os
 import sys
 from typing import Dict, List, Tuple
 
@@ -94,8 +98,20 @@ def main(argv: List[str]) -> int:
             baseline = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         # missing/unreadable baseline is NOT a failure: the first main run
-        # after this lands has nothing to compare against
+        # after this lands has nothing to compare against.  But pass LOUDLY
+        # — a broken artifact upload would otherwise disable this gate
+        # invisibly on every subsequent run.
         print(f"perf_guard: no usable baseline ({e}); passing")
+        msg = (f"perf_guard: baseline '{base_path}' missing/unreadable "
+               f"({e}); regression gate SKIPPED this run")
+        print(f"::warning title=perf_guard baseline missing::{msg}")
+        summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary_path:
+            try:
+                with open(summary_path, "a") as f:
+                    f.write(f":warning: {msg}\n")
+            except OSError:
+                pass    # a broken summary sink must not flip the verdict
         return 0
     with open(cur_path) as f:
         current = json.load(f)

@@ -158,6 +158,17 @@ class Node:
     payload_host: object = None
     payload_disk: object = None
 
+    # chunk-cache mode (--reuse chunk; docs/ARCHITECTURE.md §11): the doc
+    # context this node's KV was actually computed after.  ``src_prefix``
+    # is the preceding doc-ID tuple at compute time; ``exact_ctx`` says
+    # that context was itself exact (not patched from relocated chunks).
+    # A chunk hit whose requesting context equals (src_prefix, exact) is
+    # bit-identical; any other placement is RELOCATED — reusable, but only
+    # with boundary-token recompute, and approximate by construction.
+    # Prefix mode ignores both fields (the path IS the context).
+    src_prefix: Optional[Tuple[int, ...]] = None
+    exact_ctx: bool = False
+
     @property
     def cached(self) -> bool:
         return self.in_gpu or self.in_host or self.in_disk
@@ -312,6 +323,19 @@ class KnowledgeTree:
                 break
             out.append(nxt)
             cur = nxt
+        return out
+
+    def match_chunks(self, doc_ids: Sequence[int]) -> List[Optional[Node]]:
+        """Chunk-cache lookup (--reuse chunk): every doc is keyed directly
+        under root — the tree is flat — so each position probes
+        independently and a cached doc hits at ANY position, not just on
+        the longest cached prefix.  Returns one entry per position: the
+        cached root child, or None for a miss.  Like ``match_prefix``, a
+        copy in any tier counts as a hit."""
+        out: List[Optional[Node]] = []
+        for d in doc_ids:
+            n = self.root.children.get(d)
+            out.append(n if n is not None and n.cached else None)
         return out
 
     # ---- Alg. 1: UPDATE_NODE --------------------------------------------

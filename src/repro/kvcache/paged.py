@@ -237,6 +237,12 @@ class PagedKVStore:
         running request's block table pointing at knowledge-tree blocks)."""
         self.pool.incref(seg.blocks)
 
+    def share_blocks(self, blocks: Sequence[int]) -> None:
+        """Refcount a raw block list — the counterpart of ``release``.
+        Chunk-cache relocated reuse shares only the page-aligned TAIL of a
+        node's segment, so the reader never holds a ``PagedSegment``."""
+        self.pool.incref(blocks)
+
     def release(self, blocks: Sequence[int]) -> None:
         self.pool.decref(blocks)
 

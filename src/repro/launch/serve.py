@@ -7,7 +7,12 @@ Default mode is the continuous-batching runtime (iteration-level scheduling,
 paged batched decode, retrieval/prefill overlap — ``serving.runtime``);
 ``--sequential`` serves through the old one-request-at-a-time ``RAGServer``
 for A/B comparison, and ``--check-tokens`` runs BOTH and asserts the greedy
-tokens are identical.
+tokens are identical.  ``--reuse chunk`` switches the runtime from
+prefix-only KV reuse to the per-doc chunk cache (docs/ARCHITECTURE.md §11):
+cached docs are reused at ANY position with the first ``--recompute-tokens``
+rows of each relocated chunk recomputed.  Relocated reuse is approximate,
+so verify it with ``--check-tokens tol:<eps>`` (first-token logit L-inf
+tolerance) instead of the default bit-exact mode.
 
 ``--replicas N`` serves through N independent continuous runtimes behind a
 ``ReplicaRouter`` (doc-affinity by default; ``--routing`` picks the policy
@@ -125,6 +130,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "continuous mode)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged-KV block size in tokens (continuous mode)")
+    ap.add_argument("--reuse", default="prefix",
+                    choices=["prefix", "chunk"],
+                    help="KV-reuse discipline (docs/ARCHITECTURE.md §11): "
+                         "'prefix' reuses the longest cached doc-sequence "
+                         "prefix (bit-identical); 'chunk' caches each doc "
+                         "ONCE and reuses it at any position, recomputing "
+                         "--recompute-tokens boundary rows per relocated "
+                         "chunk (approximate — verify with "
+                         "--check-tokens tol:<eps>; requires the paged "
+                         "engine).  The sequential engine ignores this "
+                         "(it stays the exact oracle)")
+    ap.add_argument("--recompute-tokens", type=int, default=16,
+                    help="boundary tokens recomputed per relocated chunk "
+                         "(--reuse chunk); rounds UP to the block size so "
+                         "the reused tail stays page-aligned, and clamps "
+                         "to the chunk length (>= doc length degenerates "
+                         "to an exact full recompute)")
     ap.add_argument("--attn", default="auto",
                     choices=["dense", "paged", "auto"],
                     help="continuous-mode attention engine for BOTH prefill "
@@ -215,8 +237,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "affinity routing across replicas)")
     ap.add_argument("--sequential", action="store_true",
                     help="serve through the old one-at-a-time RAGServer")
-    ap.add_argument("--check-tokens", action="store_true",
-                    help="run both engines and assert identical tokens")
+    ap.add_argument("--check-tokens", nargs="?", const="exact", default=None,
+                    metavar="MODE",
+                    help="run both engines and verify outputs.  Bare flag "
+                         "or 'exact': greedy tokens must be bit-identical. "
+                         "'tol:<eps>': tokens must match OR the first-token "
+                         "logits must agree within L-inf <= eps — the "
+                         "verification mode for --reuse chunk, whose "
+                         "relocated chunks are approximate by construction")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -254,6 +282,51 @@ def tier_hit_line(tree) -> str:
     return (f"tier hits (tokens): gpu {s['hit_tokens_gpu']} / "
             f"host {s['hit_tokens_host']} / disk {s['hit_tokens_disk']}  "
             f"(spilled {s['spill_bytes']} B, fetched {s['fetch_bytes']} B)")
+
+
+def parse_check_mode(value):
+    """--check-tokens MODE -> ("exact", 0.0) or ("tol", eps).
+
+    'exact' (or the bare flag) keeps the bit-identical contract; 'tol:<eps>'
+    accepts token divergence when the first-token logits agree within
+    L-inf <= eps — the only honest check for --reuse chunk, whose relocated
+    chunks keep their original RoPE rotations (approximate by design)."""
+    if value is None or value == "exact":
+        return "exact", 0.0
+    if isinstance(value, str) and value.startswith("tol:"):
+        try:
+            eps = float(value[len("tol:"):])
+        except ValueError:
+            raise SystemExit(f"--check-tokens: bad tolerance {value!r}")
+        if eps < 0 or not np.isfinite(eps):
+            raise SystemExit(f"--check-tokens: tolerance must be a finite "
+                             f"non-negative number, got {value!r}")
+        return "tol", eps
+    raise SystemExit(f"--check-tokens: unknown mode {value!r} "
+                     f"(use 'exact' or 'tol:<eps>')")
+
+
+def token_mismatches(pairs, mode, eps):
+    """Compare (continuous, sequential) result pairs under a check mode.
+
+    exact: greedy tokens must be bit-identical.  tol: tokens may diverge iff
+    both sides carry first-token logits within L-inf <= eps.  Returns the
+    offending (req_id, tokens_a, tokens_b[, linf]) tuples."""
+    bad = []
+    for a, b in pairs:
+        if list(a.tokens) == list(b.tokens):
+            continue
+        if mode == "tol" and a.first_logits is not None \
+                and b.first_logits is not None:
+            linf = float(np.max(np.abs(
+                np.asarray(a.first_logits, np.float64)
+                - np.asarray(b.first_logits, np.float64))))
+            if linf <= eps:
+                continue
+            bad.append((a.req_id, list(a.tokens), list(b.tokens), linf))
+        else:
+            bad.append((a.req_id, list(a.tokens), list(b.tokens)))
+    return bad
 
 
 def serve_sequential(cfg, params, corpus, idx, wl, args, econf=None):
@@ -460,35 +533,34 @@ def main() -> None:
             # compare ONLY admitted misses (the requests an engine actually
             # served, with the front door's top_k rewrites applied); hits
             # are answered from cache and shed requests never execute
+            mode, eps = parse_check_mode(args.check_tokens)
             seq = serve_sequential(cfg, params, corpus, idx,
                                    list(part.misses), args, econf=econf)
             seq_by_id = {r.req_id: r for r in seq}
-            mismatches = [
-                (a.req_id, a.tokens, seq_by_id[a.req_id].tokens)
-                for a in miss_results
-                if list(a.tokens) != list(seq_by_id[a.req_id].tokens)
-            ]
+            mismatches = token_mismatches(
+                [(a, seq_by_id[a.req_id]) for a in miss_results], mode, eps)
             if mismatches:
                 raise SystemExit(f"token mismatch: {mismatches}")
+            what = ("identical" if mode == "exact"
+                    else f"within tol {eps:g}")
             print(f"\ntoken check: all {len(miss_results)} front-door miss "
-                  f"requests identical (continuous == sequential; "
+                  f"requests {what} (continuous vs sequential; "
                   f"{len(part.hits)} hits + {len(part.shed)} shed excluded "
                   f"by construction)")
         return
     if args.check_tokens and not recurrent:
+        mode, eps = parse_check_mode(args.check_tokens)
         cont = serve_continuous(cfg, params, corpus, idx, wl, args,
                                 econf=econf, fleet_conf=fleet_conf)
         seq = serve_sequential(cfg, params, corpus, idx, wl, args,
                                econf=econf)
-        mismatches = [
-            (a.req_id, a.tokens, b.tokens)
-            for a, b in zip(cont, sorted(seq, key=lambda r: r.req_id))
-            if list(a.tokens) != list(b.tokens)
-        ]
+        mismatches = token_mismatches(
+            zip(cont, sorted(seq, key=lambda r: r.req_id)), mode, eps)
         if mismatches:
             raise SystemExit(f"token mismatch: {mismatches}")
-        print(f"\ntoken check: all {len(cont)} requests identical "
-              f"(continuous == sequential)")
+        what = "identical" if mode == "exact" else f"within tol {eps:g}"
+        print(f"\ntoken check: all {len(cont)} requests {what} "
+              f"(continuous vs sequential)")
     elif args.sequential or recurrent:
         serve_sequential(cfg, params, corpus, idx, wl, args, econf=econf)
     else:

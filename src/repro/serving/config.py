@@ -80,7 +80,22 @@ class EngineConfig:
     attn: str = "auto"
     attn_impl: Optional[str] = None
     search_time_scale: float = 1.0
+    # KV-reuse discipline (docs/ARCHITECTURE.md §11): "prefix" = the
+    # classic knowledge-tree longest-cached-prefix reuse (bit-identical);
+    # "chunk" = per-doc chunk cache reused at any position with
+    # `recompute_tokens` boundary rows recomputed per relocated chunk
+    # (approximate — verify with --check-tokens tol:<eps>).
+    reuse: str = "prefix"
+    recompute_tokens: int = 16
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
+
+    def __post_init__(self):
+        if self.reuse not in ("prefix", "chunk"):
+            raise ValueError(
+                f"EngineConfig.reuse must be 'prefix' or 'chunk', "
+                f"got {self.reuse!r}")
+        if self.recompute_tokens < 0:
+            raise ValueError("EngineConfig.recompute_tokens must be >= 0")
 
     @classmethod
     def from_args(cls, args) -> "EngineConfig":
@@ -100,6 +115,8 @@ class EngineConfig:
             block_size=args.block_size,
             attn=args.attn,
             search_time_scale=args.search_scale,
+            reuse=getattr(args, "reuse", "prefix"),
+            recompute_tokens=getattr(args, "recompute_tokens", 16),
             mesh=MeshConfig.from_args(args),
         )
 
@@ -113,7 +130,9 @@ class EngineConfig:
                "--prefill-chunk", str(self.prefill_chunk),
                "--max-prefill-tokens", str(self.max_prefill_tokens),
                "--block-size", str(self.block_size), "--attn", self.attn,
-               "--search-scale", str(self.search_time_scale)]
+               "--search-scale", str(self.search_time_scale),
+               "--reuse", self.reuse,
+               "--recompute-tokens", str(self.recompute_tokens)]
         if self.disk_cache_dir is not None:
             out += ["--disk-cache-dir", self.disk_cache_dir]
         if not self.reorder:

@@ -85,6 +85,9 @@ class ServeResult:
     alpha: int
     beta: int
     docs: Tuple[int, ...]
+    # (V,) logits at the first generated token — the sequential engine is
+    # the exact oracle --check-tokens tol:<eps> measures divergence against
+    first_logits: Optional[np.ndarray] = None
 
 
 class RAGServer:
@@ -255,7 +258,7 @@ class RAGServer:
             req_id=r.req_id, tokens=toks, ttft=ttft,
             search_time=search_time, transfer_time=transfer,
             prefill_time=prefill_time, alpha=plan.alpha, beta=plan.beta,
-            docs=docs,
+            docs=docs, first_logits=np.asarray(logits[0, -1]),
         )
 
     def _prefill_segment(self, tokens, prefix, plen: int):

@@ -85,6 +85,10 @@ class CacheEntry:
     created: float                 # insertion time (TTL anchors here —
     #                                a hit never refreshes freshness, so
     #                                staleness is bounded by exactly ttl)
+    top_k: int = 0                 # retrieval depth the answer was
+    #                                generated with (0 = unknown/legacy);
+    #                                a lookup demanding more depth must
+    #                                NOT be served this entry
 
 
 class QueryCache:
@@ -117,6 +121,8 @@ class QueryCache:
         self.misses = 0
         self.expired = 0
         self.evicted = 0
+        self.depth_filtered = 0    # live entries skipped: cached top_k too
+        #                            shallow for the lookup's required depth
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -135,16 +141,26 @@ class QueryCache:
             self._invalidate_mat()
 
     def lookup(self, query_vec: np.ndarray, question_tokens,
-               now: float) -> Tuple[str, Optional[CacheEntry]]:
+               now: float, *, min_top_k: int = 0
+               ) -> Tuple[str, Optional[CacheEntry]]:
         """(kind, entry): kind is HIT_EXACT / HIT_SIMILAR / MISS.  Expired
-        entries are reclaimed first, so they can never be served."""
+        entries are reclaimed first, so they can never be served.
+
+        ``min_top_k``: required retrieval depth — an entry whose recorded
+        ``top_k`` is below it is invisible to BOTH probes (a degraded
+        tenant's answer must never serve a full-depth request).  Entries
+        with ``top_k == 0`` (unknown/legacy) only satisfy ``min_top_k == 0``.
+        """
         self._expire(now)
         key = query_key(question_tokens)
         entry = self._entries.get(key)
         if entry is not None:
-            self._entries.move_to_end(key)
-            self.hits_exact += 1
-            return HIT_EXACT, entry
+            if entry.top_k >= min_top_k:
+                self._entries.move_to_end(key)
+                self.hits_exact += 1
+                return HIT_EXACT, entry
+            self.depth_filtered += 1   # too shallow: fall through to the
+            #                            similarity probe / miss
         if self.sim_threshold < 1.0 and self._entries:
             if self._mat is None:
                 self._mat_keys = list(self._entries)
@@ -153,6 +169,11 @@ class QueryCache:
             q = np.asarray(query_vec, np.float32)
             q = q / max(float(np.linalg.norm(q)), 1e-12)
             sims = self._mat @ q
+            if min_top_k > 0:
+                ok = np.asarray(
+                    [self._entries[k].top_k >= min_top_k
+                     for k in self._mat_keys])
+                sims = np.where(ok, sims, -np.inf)
             best = int(np.argmax(sims))
             if float(sims[best]) >= self.sim_threshold:
                 k = self._mat_keys[best]
@@ -164,14 +185,16 @@ class QueryCache:
 
     def insert(self, query_vec: np.ndarray, question_tokens,
                docs: Sequence[int], answer: Sequence[int],
-               source_req_id: int, now: float) -> CacheEntry:
+               source_req_id: int, now: float, *,
+               top_k: int = 0) -> CacheEntry:
         self._expire(now)
         key = query_key(question_tokens)
         vec = np.asarray(query_vec, np.float32)
         vec = vec / max(float(np.linalg.norm(vec)), 1e-12)
         entry = CacheEntry(key=key, vec=vec, docs=tuple(int(d) for d in docs),
                            answer=[int(t) for t in answer],
-                           source_req_id=source_req_id, created=now)
+                           source_req_id=source_req_id, created=now,
+                           top_k=int(top_k))
         self._entries[key] = entry      # re-insert refreshes freshness
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
@@ -189,6 +212,7 @@ class QueryCache:
             "misses": self.misses,
             "expired": self.expired,
             "evicted": self.evicted,
+            "depth_filtered": self.depth_filtered,
         }
 
 
@@ -210,14 +234,18 @@ class SloAdmission:
     exceeds the tenant's target.
 
     Predicted TTFT = (backlog / active_replicas + 1) * service-time EWMA:
-    the request waits behind its share of the fleet backlog, then pays one
-    service time itself.  Degrading lowers the request's ``top_k`` —
-    prefill cost is roughly linear in retrieved context, so serving k' of
-    k docs scales the predicted service by k'/k.  If even the tenant's
-    ``min_top_k`` floor predicts more than ``shed_factor`` x target, the
-    request is shed (a deliberate hysteresis band: between 1x and
-    ``shed_factor`` x target the degraded floor is still admitted, so a
-    cold or noisy service estimate sheds nothing)."""
+    the request waits behind its share of the fleet backlog (the QUEUEING
+    term), then pays one service time itself (the SERVICE term).
+    Degrading lowers the request's ``top_k`` — prefill cost is roughly
+    linear in retrieved context, so serving k' of k docs scales the
+    predicted SERVICE term by k'/k; the queueing term is other requests'
+    work and does not shrink when this one retrieves fewer docs.  If even
+    the tenant's ``min_top_k`` floor predicts more than ``shed_factor``
+    x target, the request is shed (a deliberate hysteresis band: between
+    1x and ``shed_factor`` x target the degraded floor is still admitted,
+    so a cold or noisy service estimate sheds nothing).  A deep backlog is
+    therefore shed, never "degraded away": no value of k' can scale the
+    queueing term below the target."""
 
     def __init__(self, slos: Dict[str, TenantSLO], *,
                  default: Optional[TenantSLO] = None, top_k: int = 2,
@@ -242,15 +270,22 @@ class SloAdmission:
     def decide(self, tenant: str, backlog: int,
                active: int) -> AdmissionDecision:
         slo = self.slo_of(tenant)
-        pred = self.predicted_ttft(backlog, active)
+        # queueing: waiting behind other requests' (full-depth) work —
+        # invariant under THIS request's top_k.  service: this request's
+        # own prefill, the only part degrading can shrink.
+        queue = (backlog / max(active, 1)) * self.service_est
+        service = self.service_est
+        pred = queue + service
         k = self.top_k
         if pred <= slo.ttft_target:
             self.decisions[ADMIT] += 1
             return AdmissionDecision(ADMIT, k, pred)
         floor = max(1, min(slo.min_top_k, self.top_k))
-        while k > floor and pred * k / self.top_k > slo.ttft_target:
+        while k > floor and \
+                queue + service * k / self.top_k > slo.ttft_target:
             k -= 1
-        if pred * k / self.top_k > self.shed_factor * slo.ttft_target:
+        if queue + service * k / self.top_k \
+                > self.shed_factor * slo.ttft_target:
             self.decisions[SHED] += 1
             return AdmissionDecision(SHED, 0, pred)
         action = DEGRADE if k < self.top_k else ADMIT
@@ -409,8 +444,16 @@ class FrontDoor:
     def active_replicas(self) -> int:
         return self.autoscaler.active if self.autoscaler is not None else 1
 
+    def required_top_k(self, r: Request) -> int:
+        """Depth this request's answer must have been generated with: its
+        own explicit ``top_k`` when set, else the fleet's full default —
+        a previously-degraded tenant's cached answer must not be served
+        to a request admitted at full depth."""
+        return int(r.top_k) if r.top_k > 0 else self.admission.top_k
+
     def handle(self, r: Request, now: float) -> FrontDoorDecision:
-        kind, entry = self.cache.lookup(r.query_vec, r.question_tokens, now)
+        kind, entry = self.cache.lookup(r.query_vec, r.question_tokens, now,
+                                        min_top_k=self.required_top_k(r))
         if entry is not None:
             self._note_slo(r.tenant, self.LOOKUP_SECONDS)
             return FrontDoorDecision(kind=kind, entry=entry)
@@ -442,7 +485,7 @@ class FrontDoor:
         self.admission.observe_ttft(ttft)
         self._note_slo(r.tenant, ttft)
         self.cache.insert(r.query_vec, r.question_tokens, docs, answer,
-                          r.req_id, now)
+                          r.req_id, now, top_k=self.required_top_k(r))
         if self.autoscaler is not None:
             self.autoscaler.observe(
                 now, self.backlog,

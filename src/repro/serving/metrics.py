@@ -126,6 +126,10 @@ class ServingMetrics:
         self.chunks_cancelled = 0      # prefills aborted at a chunk boundary
         self.chunk_tokens_saved = 0    # prefill tokens NOT computed thanks to
                                        # mid-prefill cancellation
+        # chunk-cache reuse (--reuse chunk, docs/ARCHITECTURE.md §11)
+        self.exact_chunk_hits = 0      # docs reused bit-identically
+        self.reloc_chunk_hits = 0      # docs reused at a new position
+        self.reloc_recompute_tokens = 0   # boundary tokens recomputed
 
     def record_prefill_batch(self, n_chunks: int, n_tokens: int) -> None:
         self.prefill_batches.append((n_chunks, n_tokens))
@@ -183,6 +187,9 @@ class ServingMetrics:
                 if budget > 0 and chunk_tokens else 0.0),
             "chunks_cancelled": self.chunks_cancelled,
             "chunk_tokens_saved": self.chunk_tokens_saved,
+            "exact_chunk_hits": self.exact_chunk_hits,
+            "reloc_chunk_hits": self.reloc_chunk_hits,
+            "reloc_recompute_tokens": self.reloc_recompute_tokens,
             "blocks_shared": self.blocks_shared,
             "blocks_copied": self.blocks_copied,
             "tier_hit_tokens": {

@@ -72,7 +72,7 @@ import numpy as np
 
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.controller import RAGController
+from repro.core.controller import RAGController, effective_recompute
 from repro.core.knowledge_tree import (CacheBackend, EvictionError,
                                        KnowledgeTree)
 from repro.core.profiler import CostProfiler
@@ -201,6 +201,13 @@ class _PrefillResult:
     hit_runs: List[Tuple[List[int], int]] = dataclasses.field(
         default_factory=list)
     pg_segs: List[PagedSegment] = dataclasses.field(default_factory=list)
+    # ordered sequence layout: ("run"|"seg", index into hit_runs/pg_segs,
+    # absolute start position).  Prefix mode is runs-then-segs; chunk mode
+    # (--reuse chunk) interleaves shared runs and computed segments.
+    layout: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
+    exact: bool = True              # False once a relocated chunk was reused
+    first_logits: Optional[np.ndarray] = None   # (V,) at the first token
 
 
 @dataclasses.dataclass
@@ -229,6 +236,14 @@ class _ChunkState:
     hit_runs: List[Tuple[List[int], int]] = dataclasses.field(
         default_factory=list)
     pg_segs: List[PagedSegment] = dataclasses.field(default_factory=list)
+    # paged mode: ordered layout of the full sequence (see _PrefillResult).
+    # seg_abs[i] is the absolute start position of compute segment i —
+    # chunk mode scatters compute segments between shared runs, so the
+    # cursor's q_start is seg_abs[seg_idx] + seg_off, not a running prefix.
+    layout: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
+    seg_abs: List[int] = dataclasses.field(default_factory=list)
+    miss_segs: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -263,6 +278,8 @@ class _ReqRun:
     last_tok: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
     remaining: int = 0
+    exact: bool = True
+    first_logits: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -274,6 +291,11 @@ class RuntimeResult:
     alpha: int
     beta: int
     speculative_hit: bool
+    # chunk-cache mode: False when a relocated chunk was reused (outputs are
+    # approximate — verify with --check-tokens tol:<eps>); prefix mode and
+    # full recomputes stay True (bit-identical contract holds).
+    exact: bool = True
+    first_logits: Optional[np.ndarray] = None   # (V,) logits at first token
 
 
 class ContinuousRuntime:
@@ -301,6 +323,8 @@ class ContinuousRuntime:
         n_blocks: Optional[int] = None,
         attn: str = "auto",
         attn_impl: Optional[str] = None,
+        reuse: str = "prefix",
+        recompute_tokens: int = 16,
         search_time_scale: float = 1.0,
         profiler: Optional[CostProfiler] = None,
         mesh: Optional[MeshConfig] = None,
@@ -325,6 +349,8 @@ class ContinuousRuntime:
             block_size = config.block_size
             attn = config.attn
             attn_impl = config.attn_impl
+            reuse = config.reuse
+            recompute_tokens = config.recompute_tokens
             search_time_scale = config.search_time_scale
             mesh = config.mesh
         if cfg.family in ("ssm", "hybrid"):
@@ -338,6 +364,16 @@ class ContinuousRuntime:
         # dense gather survives only as the explicit --attn dense baseline.
         self.attn = "paged" if attn == "auto" else attn
         self.attn_impl = attn_impl
+        if reuse not in ("prefix", "chunk"):
+            raise ValueError(f"unknown reuse mode {reuse!r}")
+        if reuse == "chunk" and self.attn != "paged":
+            # relocated reuse needs per-run absolute positions in the run
+            # table (boundary rows attend at their NEW positions over pages
+            # cached elsewhere) — the dense gather has no such contract
+            raise ValueError("--reuse chunk requires the paged engine "
+                             "(--attn paged/auto)")
+        self.reuse = reuse
+        self.recompute_tokens = int(recompute_tokens)
         self.cfg = cfg
         self.corpus = corpus
         self.index = index
@@ -441,6 +477,23 @@ class ContinuousRuntime:
         prefill promotes it (the admission check must see that)."""
         ctx = (sum(int(self.corpus.doc_lengths[d]) for d in job.docs)
                + len(job.req.r.question_tokens))
+        if self.reuse == "chunk":
+            cached = promote = 0
+            for i, node in enumerate(self.tree.match_chunks(job.docs)):
+                if node is None:
+                    continue
+                n_tok = int(self.corpus.doc_lengths[job.docs[i]])
+                if node.exact_ctx and \
+                        node.src_prefix == tuple(job.docs[:i]):
+                    reused = n_tok
+                else:
+                    r = effective_recompute(self.recompute_tokens, n_tok,
+                                            self.store.block_size)
+                    reused = n_tok - r     # 0 when r covers the whole chunk
+                cached += reused
+                if reused and not node.in_gpu:
+                    promote += node.n_tokens   # the whole node promotes
+            return ctx, max(ctx - cached, 1), promote
         hit = self.tree.match_prefix(job.docs)
         cached = sum(n.n_tokens for n in hit)
         promote = sum(n.n_tokens for n in hit if not n.in_gpu)
@@ -483,8 +536,11 @@ class ContinuousRuntime:
             self._n_slots = n_slots
             # paged mode reads runs, not a contiguous span: every segment of
             # the slot mapping (<= top_k shared docs + 1 private) may end
-            # mid-block, wasting at most one table entry each
-            self._n_tbl = n_slots + self.top_k + 1
+            # mid-block, wasting at most one table entry each.  Chunk mode
+            # splits a relocated doc into boundary seg + shared tail, so up
+            # to 2 entries per doc go to waste instead of 1.
+            per_doc = 2 if self.reuse == "chunk" else 1
+            self._n_tbl = n_slots + per_doc * self.top_k + 1
             self._build_decode_fn()
         first = len(self._all)
         for r in requests:
@@ -504,7 +560,8 @@ class ContinuousRuntime:
             out.append(RuntimeResult(
                 req_id=st.r.req_id, tokens=list(st.tokens), ttft=st.tl.ttft,
                 docs=st.final_docs or (), alpha=st.tl.alpha, beta=st.tl.beta,
-                speculative_hit=st.tl.speculative_hit))
+                speculative_hit=st.tl.speculative_hit,
+                exact=st.exact, first_logits=st.first_logits))
         out.sort(key=lambda x: x.req_id)
         return out
 
@@ -576,7 +633,10 @@ class ContinuousRuntime:
         becomes a pure host->GPU copy."""
         if self.disk is None:
             return
-        hit = self.tree.match_prefix(docs)
+        if self.reuse == "chunk":
+            hit = [n for n in self.tree.match_chunks(docs) if n is not None]
+        else:
+            hit = self.tree.match_prefix(docs)
         pinned = set(hit)   # staging node k must not re-spill node k-1
         for n in hit:
             if n.in_disk and not n.in_host and not n.in_gpu:
@@ -716,9 +776,18 @@ class ContinuousRuntime:
         job.started = self.now
         st.start_by_docs.setdefault(job.docs, self.now)
         doc_tokens = [int(self.corpus.doc_lengths[d]) for d in job.docs]
-        plan = self.controller.plan(job.docs, doc_tokens,
-                                    len(st.r.question_tokens))
+        if self.reuse == "chunk":
+            plan = self.controller.plan_chunks(
+                job.docs, doc_tokens, len(st.r.question_tokens),
+                recompute_tokens=self.recompute_tokens,
+                block_size=self.store.block_size)
+        else:
+            plan = self.controller.plan(job.docs, doc_tokens,
+                                        len(st.r.question_tokens))
         self.controller.promote(plan)   # host->device pull
+        if plan.chunks is not None:
+            self._begin_chunk_layout(job, plan)
+            return
         segs = [np.asarray(self.corpus.doc_tokens[job.docs[i]])
                 for i in range(len(plan.hit_nodes), len(job.docs))]
         bounds, start = [], plan.alpha
@@ -736,21 +805,104 @@ class ContinuousRuntime:
             # no dense gather of the hit prefix: snapshot its page runs and
             # refcount-share them (the nodes are also pinned until commit,
             # so the pages can be read in place for the whole prefill)
-            hit_runs, plen = [], 0
+            hit_runs, layout, plen = [], [], 0
             for node in plan.hit_nodes:
                 seg = node.payload_gpu
                 self.store.share(seg)
+                layout.append(("run", len(hit_runs), plen))
                 hit_runs.append((list(seg.blocks), seg.n_tokens))
                 plen += seg.n_tokens
+            seg_abs, pos = [], plen
+            for i, s in enumerate(segs):
+                seg_abs.append(pos)
+                layout.append(("seg", i, pos))
+                pos += len(s)
             job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
                                  pieces=pieces, total=sum(pieces), plen=plen)
             job.cs.hit_runs = hit_runs
+            job.cs.layout = layout
+            job.cs.seg_abs = seg_abs
             job.cs.pg_segs = [PagedSegment(self.store, [], 0) for _ in segs]
         else:
             prefix_hit, plen = self._assemble_prefix(plan.hit_nodes)
             job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=bounds,
                                  pieces=pieces, total=sum(pieces),
                                  plen=plen, prefix_hit=prefix_hit)
+        self._partial_jobs.append(job)
+
+    def _begin_chunk_layout(self, job: _Job, plan) -> None:
+        """Chunk-cache twin of the prefix begin path (--reuse chunk): the
+        request's sequence is an ORDERED INTERLEAVING of shared cached runs
+        and to-compute segments.  Per doc position (ChunkItem):
+
+          * exact — share the node's pages whole, like a prefix hit;
+          * reloc — an owned boundary segment of ``recompute`` tokens (the
+            doc head, recomputed at its NEW absolute position over the true
+            preceding context) followed by the node's page-aligned TAIL
+            pages, refcount-shared in place (stale RoPE — approximate);
+          * miss — an owned segment computing the whole doc.
+
+        The question is the final owned segment.  Compute segments sit at
+        scattered absolute offsets, so each records its start (seg_abs)."""
+        st = job.req
+        bs = self.store.block_size
+        segs: List[np.ndarray] = []
+        seg_abs: List[int] = []
+        layout: List[Tuple[str, int, int]] = []
+        hit_runs: List[Tuple[List[int], int]] = []
+        miss_segs: List[int] = []
+        pos = 0
+        for it in plan.chunks:
+            if it.kind == "exact":
+                seg = it.node.payload_gpu
+                self.store.share(seg)
+                layout.append(("run", len(hit_runs), pos))
+                hit_runs.append((list(seg.blocks), seg.n_tokens))
+                self.metrics.exact_chunk_hits += 1
+            elif it.kind == "reloc":
+                toks = np.asarray(self.corpus.doc_tokens[it.doc_id])
+                segs.append(toks[:it.recompute])
+                seg_abs.append(pos)
+                layout.append(("seg", len(segs) - 1, pos))
+                # recompute is page-aligned (effective_recompute), so the
+                # reused tail starts at slot 0 of a block — the run-table /
+                # decode-run contract every shared run must satisfy
+                tail = list(it.node.payload_gpu.blocks[it.recompute // bs:])
+                self.store.share_blocks(tail)
+                layout.append(("run", len(hit_runs), pos + it.recompute))
+                hit_runs.append((tail, it.n_tokens - it.recompute))
+                self.metrics.reloc_chunk_hits += 1
+                self.metrics.reloc_recompute_tokens += it.recompute
+            else:
+                segs.append(np.asarray(self.corpus.doc_tokens[it.doc_id]))
+                seg_abs.append(pos)
+                layout.append(("seg", len(segs) - 1, pos))
+                miss_segs.append(len(segs) - 1)
+            pos += it.n_tokens
+        segs.append(np.asarray(st.r.question_tokens))
+        seg_abs.append(pos)
+        layout.append(("seg", len(segs) - 1, pos))
+        seg_lens = [len(s) for s in segs]
+        chunk = self.sched.config.prefill_chunk
+        if chunk > 0:
+            pieces = prefill_piece_sizes(seg_lens, chunk)
+        else:
+            # one piece per segment even unchunked: a piece's query rows are
+            # CONSECUTIVE absolute positions (kernel q_start contract), and
+            # here compute segments are separated by shared runs
+            pieces = [int(n) for n in seg_lens if n > 0]
+        if not pieces:
+            raise ValueError(
+                f"request {st.r.req_id}: nothing to prefill (empty question "
+                f"and fully cached documents) — no logits can be produced")
+        job.cs = _ChunkState(plan=plan, segs=segs, doc_bounds=[],
+                             pieces=pieces, total=sum(pieces),
+                             plen=plan.alpha)
+        job.cs.hit_runs = hit_runs
+        job.cs.layout = layout
+        job.cs.seg_abs = seg_abs
+        job.cs.miss_segs = miss_segs
+        job.cs.pg_segs = [PagedSegment(self.store, [], 0) for _ in segs]
         self._partial_jobs.append(job)
 
     def _chunk_prefix(self, cs: _ChunkState) -> Tuple[Optional[dict], int]:
@@ -828,7 +980,14 @@ class ContinuousRuntime:
         cannot hold the piece (job aborted + requeued in place)."""
         cs = job.cs
         n = cs.pieces.pop(0)
-        q_start = cs.plen
+        while cs.seg_idx < len(cs.segs) and \
+                cs.seg_off >= len(cs.segs[cs.seg_idx]):
+            cs.seg_idx += 1          # skip empty segments before anchoring
+            cs.seg_off = 0
+        # the piece's rows are consecutive absolute positions anchored at
+        # the cursor's segment (chunk mode scatters compute segments between
+        # shared runs, so a running prefix length is NOT the position)
+        q_start = cs.seg_abs[cs.seg_idx] + cs.seg_off
         toks = np.zeros(n, np.int32)
         wblk = np.full(n, self._scratch_block, np.int32)
         wslot = np.zeros(n, np.int32)
@@ -862,25 +1021,32 @@ class ContinuousRuntime:
         return (job, toks, wblk, wslot, q_start, tables, counts, starts, n)
 
     def _paged_chunk_row(self, cs: _ChunkState):
-        """Run-table row over [hit runs ‖ computed segments], same contract
-        as decode (kernels/paged_attention.py): every segment starts at
-        slot 0 of a fresh block, so runs are exactly the per-block spans."""
+        """Run-table row over the ordered sequence layout, same contract as
+        decode (kernels/paged_attention.py): every entry starts at slot 0 of
+        a fresh block, so runs are exactly the per-block spans.  Each entry
+        carries its TRUE absolute start — with chunk-mode interleaving, a
+        shared run can sit PAST a partially filled compute segment, and
+        causal masking over absolute positions (not table order) is what
+        keeps those later keys invisible to this piece's rows."""
         T = self._n_tbl
         bs = self.store.block_size
         tables = np.full(T, self._scratch_block, np.int32)
         counts = np.zeros(T, np.int32)
         starts = np.zeros(T, np.int32)
-        j, pos = 0, 0
-        runs = cs.hit_runs + [(pg.blocks, pg.n_tokens) for pg in cs.pg_segs]
-        for blocks, ntok in runs:
+        j = 0
+        for kind, idx, abs0 in cs.layout:
+            if kind == "run":
+                blocks, ntok = cs.hit_runs[idx]
+            else:
+                pg = cs.pg_segs[idx]
+                blocks, ntok = pg.blocks, pg.n_tokens
             for bi, blk in enumerate(blocks):
                 c = min(bs, ntok - bi * bs)
                 if c <= 0:
                     break
                 tables[j] = blk
                 counts[j] = c
-                starts[j] = pos
-                pos += c
+                starts[j] = abs0 + bi * bs
                 j += 1
         assert j <= T, (j, T)
         return tables, counts, starts
@@ -958,8 +1124,13 @@ class ContinuousRuntime:
                 hit_docs=cs.plan.hit_docs,
                 hit_tier_tokens=cs.plan.hit_tier_tokens,
                 speculative=job.speculative, started=job.started,
-                hit_runs=hit_runs, pg_segs=pg_segs)
-            if self.attn == "paged":
+                hit_runs=hit_runs, pg_segs=pg_segs,
+                layout=list(cs.layout), exact=cs.plan.exact,
+                first_logits=np.asarray(cs.logits[0, -1]))
+            if cs.plan.chunks is not None:
+                self._commit_paged_chunks(
+                    cs.plan, [pg_segs[i] for i in cs.miss_segs])
+            elif self.attn == "paged":
                 self._commit_paged(cs.plan, pg_segs[:len(cs.doc_bounds)])
             else:
                 payloads = [(start, length, cs.cache)
@@ -1057,6 +1228,20 @@ class ContinuousRuntime:
             if id(seg) not in kept:
                 self.store.release(seg.blocks)
 
+    def _commit_paged_chunks(self, plan, doc_segs) -> None:
+        """Chunk-mode commit (--reuse chunk): only MISS docs enter the flat
+        chunk cache — the canonical entry for an exact/reloc hit is the node
+        already resident, and relocated boundary segments stay request-
+        private (their KV is position-specific).  Pure refcounting like
+        ``_commit_paged``; declined segments return their extra ref."""
+        for seg in doc_segs:
+            self.store.share(seg)
+        inserted = self.controller.commit_chunks(plan, list(doc_segs))
+        kept = {id(n.payload_gpu) for n in inserted}
+        for seg in doc_segs:
+            if id(seg) not in kept:
+                self.store.release(seg.blocks)
+
     def _reclaim_blocks(self, needed: int) -> bool:
         """Evict unpinned tree leaves (PGDSF order, shared Alg. 1 loop)
         until the pool has ``needed`` free blocks."""
@@ -1095,6 +1280,8 @@ class ContinuousRuntime:
         if start is not None:
             tl.final_prefill_start = start
         st.tokens = [res.first_token]
+        st.exact = res.exact
+        st.first_logits = res.first_logits
         st.remaining = self.max_new_tokens - 1
         for job in st.jobs:            # any other pending work is now moot
             if not job.cancelled and job.docs != res.docs:
@@ -1194,16 +1381,22 @@ class ContinuousRuntime:
         pos_slot: List[int] = []
         shared: List[int] = []
         owned: List[int] = []
-        for blocks, n_tokens in res.hit_runs:
-            for i in range(n_tokens):
-                pos_blk.append(blocks[i // bs])
-                pos_slot.append(i % bs)
-            shared.extend(blocks)
-        for pg in res.pg_segs:
-            for i in range(pg.n_tokens):
-                pos_blk.append(pg.blocks[i // bs])
-                pos_slot.append(i % bs)
-            owned.extend(pg.blocks)
+        # walk the ordered layout — prefix mode is runs-then-segs, chunk
+        # mode interleaves them; either way entries appear in absolute
+        # position order, so appending yields the position->slot mapping
+        for kind, idx, _ in res.layout:
+            if kind == "run":
+                blocks, n_tokens = res.hit_runs[idx]
+                for i in range(n_tokens):
+                    pos_blk.append(blocks[i // bs])
+                    pos_slot.append(i % bs)
+                shared.extend(blocks)
+            else:
+                pg = res.pg_segs[idx]
+                for i in range(pg.n_tokens):
+                    pos_blk.append(pg.blocks[i // bs])
+                    pos_slot.append(i % bs)
+                owned.extend(pg.blocks)
         st.pos_blk, st.pos_slot = pos_blk, pos_slot
         st.owned_blocks = shared + owned
         st.length = res.total_len

@@ -33,7 +33,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import RAGController, RequestPlan
+from repro.core.controller import (RAGController, RequestPlan,
+                                   effective_recompute)
 from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler, HardwareProfile
 from repro.core.speculative import SpecState, SpeculativeController
@@ -81,6 +82,21 @@ class SimConfig:
                                    # profile.with_tp(tp) (compute/bandwidth
                                    # scale by tp, each forward pays a ring
                                    # all-reduce term); mirrors serve.py --tp
+    reuse: str = "prefix"          # "prefix" = longest-cached-prefix reuse;
+                                   # "chunk" = per-doc chunk cache reused at
+                                   # any position with boundary recompute
+                                   # (docs/ARCHITECTURE.md §11)
+    recompute_tokens: int = 16     # boundary rows recomputed per relocated
+                                   # chunk (page-aligned up via
+                                   # effective_recompute — same widths as
+                                   # the real runtime)
+    block_size: int = 16           # KV page size effective_recompute aligns
+                                   # to; mirrors the runtime's paged pool
+
+    def __post_init__(self):
+        if self.reuse not in ("prefix", "chunk"):
+            raise ValueError(f"SimConfig.reuse must be 'prefix' or 'chunk', "
+                             f"got {self.reuse!r}")
 
 
 @dataclasses.dataclass
@@ -292,8 +308,7 @@ class RAGSimulator:
             st.queued_jobs.append(job)
             # cached/compute lengths for cache-aware reordering
             plan_docs = [self.corpus.doc_lengths[i] for i in d]
-            hit = self.tree.match_prefix(d)
-            cached = sum(n.n_tokens for n in hit)
+            cached = self._cached_tokens(d, plan_docs)
             compute = sum(plan_docs) + len(st.r.question_tokens) - cached
             self.sched.submit(job, cached, compute)
         self.sched_times.append(_t.perf_counter() - t0)
@@ -342,11 +357,29 @@ class RAGSimulator:
         self._partial_jobs.remove(job)
         self.sched.abort_prefill(job)
 
+    def _cached_tokens(self, docs, doc_tokens) -> int:
+        """Reusable-token estimate for reordering/admission: prefix mode
+        counts the longest cached prefix, chunk mode counts each cached doc
+        minus its page-aligned boundary recompute (same arithmetic as the
+        real runtime's ``_job_ctx_beta``)."""
+        if self.cfg.reuse != "chunk":
+            return sum(n.n_tokens for n in self.tree.match_prefix(docs))
+        cached = 0
+        for i, node in enumerate(self.tree.match_chunks(docs)):
+            if node is None:
+                continue
+            n_tok = int(doc_tokens[i])
+            if node.exact_ctx and node.src_prefix == tuple(docs[:i]):
+                cached += n_tok
+            else:
+                cached += n_tok - effective_recompute(
+                    self.cfg.recompute_tokens, n_tok, self.cfg.block_size)
+        return cached
+
     def _job_lens(self, job: _Job) -> Tuple[int, int]:
-        hit = self.tree.match_prefix(job.docs)
-        cached = sum(n.n_tokens for n in hit)
-        total = sum(self.corpus.doc_lengths[i] for i in job.docs) \
-            + len(job.req.r.question_tokens)
+        doc_tokens = [int(self.corpus.doc_lengths[i]) for i in job.docs]
+        cached = self._cached_tokens(job.docs, doc_tokens)
+        total = sum(doc_tokens) + len(job.req.r.question_tokens)
         return cached, max(total - cached, 1)
 
     def _start_prefill_batch(self, chunks) -> None:
@@ -382,15 +415,26 @@ class RAGSimulator:
         Returns the promotion transfer seconds."""
         st = job.req
         doc_tokens = [int(self.corpus.doc_lengths[i]) for i in job.docs]
-        plan = self.controller.plan(job.docs, doc_tokens,
-                                    len(st.r.question_tokens)
-                                    + self.cfg.system_prompt_tokens)
+        q_tokens = len(st.r.question_tokens) + self.cfg.system_prompt_tokens
+        if self.cfg.reuse == "chunk":
+            plan = self.controller.plan_chunks(
+                job.docs, doc_tokens, q_tokens,
+                recompute_tokens=self.cfg.recompute_tokens,
+                block_size=self.cfg.block_size)
+        else:
+            plan = self.controller.plan(job.docs, doc_tokens, q_tokens)
         transfer = self.controller.promote(plan)
         compute = self.tree.profiler.estimate(plan.alpha, plan.beta)
         job.plan = plan
         job.started = self.now
-        seg_lens = list(plan.doc_tokens[len(plan.hit_nodes):]) \
-            + [plan.question_tokens]
+        if plan.chunks is not None:
+            # compute segments: whole missed docs + reloc boundary heads
+            seg_lens = [it.n_tokens if it.kind == "miss" else it.recompute
+                        for it in plan.chunks if it.kind != "exact"]
+            seg_lens.append(plan.question_tokens)
+        else:
+            seg_lens = list(plan.doc_tokens[len(plan.hit_nodes):]) \
+                + [plan.question_tokens]
         job.pending = prefill_piece_sizes(seg_lens, self.cfg.prefill_chunk) \
             or [1]
         job.sec_per_token = compute / max(sum(job.pending), 1)
@@ -429,8 +473,12 @@ class RAGSimulator:
             if not (job.cancelled or st.done):
                 # completed prefills populate the tree even if speculative;
                 # §8 "Large top-k": optionally cache only the leading docs
-                self.controller.commit(job.plan,
-                                       max_docs=self.cfg.cache_top_k or None)
+                if job.plan.chunks is not None:
+                    self.controller.commit_chunks(
+                        job.plan, max_docs=self.cfg.cache_top_k or None)
+                else:
+                    self.controller.commit(
+                        job.plan, max_docs=self.cfg.cache_top_k or None)
                 st.prefill_done = self.now
                 st.prefill_docs = job.docs
                 if st.final_docs is not None and job.docs == st.final_docs:

@@ -1,0 +1,386 @@
+"""Chunk-cache (--reuse chunk) unit + e2e coverage (docs/ARCHITECTURE.md §11).
+
+Unit layer (no model): ``match_chunks`` position independence,
+``effective_recompute`` page alignment/clamping (plus a hypothesis
+property: ``recompute_tokens >= chunk_len`` degenerates to exact full
+recompute), ``plan_chunks`` classification, ``commit_chunks``
+src_prefix/exact_ctx recording and incumbent protection, and the
+``--check-tokens`` mode parser / tolerance comparator.
+
+E2e layer (tiny real model): exact chunk hits on unchanged doc order are
+bit-identical; RELOCATED hits (same docs, reversed order) are flagged
+``exact=False`` and their first-token logit divergence vs the sequential
+oracle is bounded by the tolerance comparator; a huge recompute budget
+degenerates back to bit-exact; block accounting still balances; dense
+attention rejects chunk mode.  Exact-mode prefix-reuse parity at
+N=1/N=3/tp=2 stays covered by test_serve_main.py / test_tp_serving.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.controller import RAGController, effective_recompute
+from repro.core.knowledge_tree import KnowledgeTree
+from repro.core.profiler import A10G_MISTRAL_7B, CostProfiler
+from repro.launch.serve import parse_check_mode, token_mismatches
+from repro.serving.config import EngineConfig
+
+
+def make_tree(gpu=10_000, host=40_000, policy="pgdsf"):
+    prof = CostProfiler.from_profile(A10G_MISTRAL_7B)
+    return KnowledgeTree(gpu, host, policy=policy, profiler=prof,
+                         bytes_per_token=1)
+
+
+# ---------------------------------------------------------------------------
+# tree: flat per-position probing
+# ---------------------------------------------------------------------------
+
+def test_match_chunks_hits_any_position():
+    t = make_tree()
+    t.insert(t.root, 7, 100)
+    assert [n.doc_id if n else None for n in t.match_chunks([7, 8])] \
+        == [7, None]
+    # the SAME cached doc hits relocated to position 1 — where
+    # match_prefix, by construction, sees nothing
+    assert [n.doc_id if n else None for n in t.match_chunks([8, 7])] \
+        == [None, 7]
+    assert t.match_prefix([8, 7]) == []
+
+
+def test_match_chunks_requires_residency():
+    t = make_tree()
+    n, _ = t.insert(t.root, 3, 100)
+    n.in_gpu = False                       # fully evicted, node lingers
+    assert t.match_chunks([3]) == [None]
+
+
+# ---------------------------------------------------------------------------
+# effective_recompute: page alignment + degenerate clamp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,n,bs,want", [
+    (16, 100, 16, 16),      # already aligned
+    (17, 100, 16, 32),      # rounds UP to the next page
+    (1, 100, 16, 16),
+    (0, 100, 16, 0),        # zero boundary stays zero
+    (99, 100, 16, 100),     # aligned past the end: clamps to chunk length
+    (100, 100, 16, 100),    # degenerate: full recompute
+    (500, 100, 16, 100),
+    (5, 100, 1, 5),         # block_size 1: no alignment
+])
+def test_effective_recompute_table(r, n, bs, want):
+    assert effective_recompute(r, n, bs) == want
+
+
+def test_effective_recompute_degenerate_is_exact_plan():
+    """recompute_tokens >= chunk_len must reclassify the hit as a plain
+    miss (full recompute) — the plan is then exact end-to-end."""
+    t = make_tree()
+    t.insert(t.root, 1, 50)
+    ctl = RAGController(t)
+    plan = ctl.plan_chunks([2, 1], [50, 50], 10, recompute_tokens=50,
+                           block_size=16)
+    assert [it.kind for it in plan.chunks] == ["miss", "miss"]
+    assert plan.exact and plan.alpha == 0
+    assert plan.beta == 110
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_effective_recompute_properties_hypothesis():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 4096), st.integers(1, 4096), st.integers(1, 128))
+    def prop(r, n, bs):
+        eff = effective_recompute(r, n, bs)
+        assert 0 <= eff <= n
+        assert eff >= min(r, n)               # never recompute less than asked
+        if r >= n:
+            assert eff == n                   # degenerate: exact recompute
+        elif eff < n:
+            assert eff % bs == 0              # reused tail starts on a page
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# controller: plan/commit classification and metadata
+# ---------------------------------------------------------------------------
+
+def _commit_all_miss(ctl, docs, toks, q=10):
+    plan = ctl.plan_chunks(docs, toks, q, recompute_tokens=16, block_size=16)
+    ctl.promote(plan)
+    return plan, ctl.commit_chunks(plan)
+
+
+def test_plan_chunks_classification_and_alpha_beta():
+    t = make_tree()
+    ctl = RAGController(t)
+    # seed the chunk cache: [1, 2] both commit as root children
+    _commit_all_miss(ctl, [1, 2], [64, 64])
+    # same docs, reversed: doc 2 relocated (src_prefix was (1,)), doc 1
+    # relocated (src_prefix was ()), both reuse tails minus 16 boundary rows
+    plan = ctl.plan_chunks([2, 1], [64, 64], 10, recompute_tokens=16,
+                           block_size=16)
+    assert [it.kind for it in plan.chunks] == ["reloc", "reloc"]
+    assert not plan.exact
+    assert plan.alpha == 2 * (64 - 16)
+    assert plan.beta == 2 * 16 + 10
+    assert plan.alpha + plan.beta == plan.full_len == 64 + 64 + 10
+    # unchanged order: doc 1 at position 0 has src_prefix () and exact_ctx
+    # -> exact; doc 2 at position 1 behind doc 1 -> exact too
+    plan2 = ctl.plan_chunks([1, 2], [64, 64], 10, recompute_tokens=16,
+                            block_size=16)
+    assert [it.kind for it in plan2.chunks] == ["exact", "exact"]
+    assert plan2.exact and plan2.alpha == 128
+    for n in t.nodes():
+        assert not n.pinned
+
+
+def test_commit_chunks_records_context_and_skips_reloc():
+    t = make_tree()
+    ctl = RAGController(t)
+    plan, new = _commit_all_miss(ctl, [1, 2], [64, 64])
+    assert sorted(n.doc_id for n in new) == [1, 2]
+    by_doc = {n.doc_id: n for n in new}
+    assert by_doc[1].src_prefix == () and by_doc[1].exact_ctx
+    assert by_doc[2].src_prefix == (1,) and by_doc[2].exact_ctx
+    assert all(n.parent is t.root for n in new)   # flat chunk cache
+    # request [2, 3]: 2 relocates (never re-commits), 3 misses and commits
+    # with exact_ctx=False — everything after a relocated chunk is
+    # approximate context
+    plan = ctl.plan_chunks([2, 3], [64, 64], 10, recompute_tokens=16,
+                           block_size=16)
+    ctl.promote(plan)
+    new = ctl.commit_chunks(plan)
+    assert [n.doc_id for n in new] == [3]
+    assert new[0].src_prefix == (2,) and not new[0].exact_ctx
+    assert t.root.children[2] is by_doc[2]        # incumbent untouched
+
+
+def test_commit_chunks_never_replaces_incumbent():
+    """If a concurrent prefill commits a doc between our plan and commit,
+    the incumbent node (with ITS src_prefix) stays canonical — our payload
+    is declined, not spliced under the incumbent's metadata."""
+    t = make_tree()
+    ctl = RAGController(t)
+    plan = ctl.plan_chunks([5], [64], 10, recompute_tokens=16, block_size=16)
+    ctl.promote(plan)
+    # concurrent commit wins the race
+    _commit_all_miss(ctl, [9, 5], [64, 64])
+    incumbent = t.root.children[5]
+    assert incumbent.src_prefix == (9,)
+    new = ctl.commit_chunks(plan, payloads=["ours"])
+    assert new == []                              # declined -> caller reclaims
+    assert t.root.children[5] is incumbent
+    assert incumbent.src_prefix == (9,)
+
+
+# ---------------------------------------------------------------------------
+# --check-tokens mode parsing + tolerance comparator (launch/serve.py)
+# ---------------------------------------------------------------------------
+
+def test_parse_check_mode():
+    assert parse_check_mode(None) == ("exact", 0.0)
+    assert parse_check_mode("exact") == ("exact", 0.0)
+    assert parse_check_mode("tol:0.5") == ("tol", 0.5)
+    assert parse_check_mode("tol:1e-3") == ("tol", 1e-3)
+    for bad in ("tol:", "tol:x", "tol:-1", "tol:inf", "fuzzy"):
+        with pytest.raises(SystemExit):
+            parse_check_mode(bad)
+
+
+@dataclasses.dataclass
+class _Res:
+    req_id: int
+    tokens: list
+    first_logits: object = None
+
+
+def test_token_mismatches_tolerance_semantics():
+    logit = np.array([0.0, 1.0, 2.0])
+    same = (_Res(0, [1, 2], logit), _Res(0, [1, 2], logit + 0.4))
+    close = (_Res(1, [1, 2], logit), _Res(1, [1, 3], logit + 0.4))
+    far = (_Res(2, [1, 2], logit), _Res(2, [1, 3], logit + 2.0))
+    # exact mode: only token equality counts
+    assert [m[0] for m in token_mismatches([same, close, far], "exact", 0.0)] \
+        == [1, 2]
+    # tol mode: differing tokens pass iff first-token logits are within eps
+    bad = token_mismatches([same, close, far], "tol", 0.5)
+    assert [m[0] for m in bad] == [2]
+    assert bad[0][3] == pytest.approx(2.0)        # reported L-inf
+    # missing logits can never pass on divergent tokens
+    nolog = (_Res(3, [1], None), _Res(3, [2], None))
+    assert [m[0] for m in token_mismatches([nolog], "tol", 100.0)] == [3]
+
+
+def test_engine_config_reuse_roundtrip():
+    cfg = EngineConfig(reuse="chunk", recompute_tokens=32)
+    cli = cfg.to_cli()
+    assert "--reuse" in cli and "chunk" in cli
+    i = cli.index("--recompute-tokens")
+    assert cli[i + 1] == "32"
+    with pytest.raises(ValueError):
+        EngineConfig(reuse="suffix")
+    with pytest.raises(ValueError):
+        EngineConfig(recompute_tokens=-1)
+
+
+# ---------------------------------------------------------------------------
+# e2e: tiny real model through the continuous runtime
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_reduced                      # noqa: E402
+from repro.models import model as M                        # noqa: E402
+from repro.retrieval.corpus import make_corpus, make_workload  # noqa: E402
+from repro.retrieval.vectordb import IVFIndex              # noqa: E402
+from repro.serving.engine import RAGServer                 # noqa: E402
+from repro.serving.runtime import ContinuousRuntime        # noqa: E402
+
+
+class FlippableIndex:
+    """Wraps an index; with ``reverse=True`` every retrieval returns the
+    same doc set in reversed order — cached docs then reappear at the
+    wrong positions, which is exactly the relocated-chunk case."""
+
+    def __init__(self, base):
+        self.base = base
+        self.reverse = False
+
+    def search(self, q, k, fraction=1.0):
+        out = self.base.search(q, k, fraction)
+        return out[::-1] if self.reverse else out
+
+    def staged_search(self, q, k, fraction=1.0):
+        for st in self.base.staged_search(q, k, fraction):
+            yield (dataclasses.replace(st, topk=tuple(reversed(st.topk)))
+                   if self.reverse else st)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_corpus(16, mean_doc_tokens=24, vocab=cfg.vocab_size, seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=4, nprobe=4)
+    wl = make_workload(corpus, n_requests=6, rate=100.0, question_tokens=8,
+                       vocab=cfg.vocab_size, zipf_s=1.2, seed=1)
+    return cfg, params, corpus, idx, wl
+
+
+def _chunk_runtime(cfg, params, corpus, idx, **kw):
+    kw.setdefault("recompute_tokens", 8)
+    return ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
+                             attn="paged", reuse="chunk", block_size=8,
+                             **kw)
+
+
+def test_chunk_mode_exact_hits_bit_identical(setup):
+    """Repeating ONE request keeps its doc order unchanged, so pass 2
+    reuses both chunks exactly: alpha > 0, still flagged exact, tokens
+    bit-identical."""
+    cfg, params, corpus, idx, wl = setup
+    rt = _chunk_runtime(cfg, params, corpus, idx)
+    one = rt.serve([wl[0]], max_new_tokens=3)
+    two = rt.serve([wl[0]], max_new_tokens=3)
+    assert rt.metrics.exact_chunk_hits > 0
+    assert rt.metrics.reloc_chunk_hits == 0
+    assert one[0].exact and two[0].exact
+    assert one[0].alpha == 0 and two[0].alpha > 0
+    assert two[0].beta < one[0].beta
+    assert one[0].tokens == two[0].tokens
+
+
+def test_chunk_mode_exact_results_match_oracle(setup):
+    """Full zipf workload served twice: doc order churns ACROSS requests,
+    so exact, relocated, and miss placements all occur — but every result
+    still flagged exact must match the sequential oracle bit-for-bit."""
+    cfg, params, corpus, idx, wl = setup
+    rt = _chunk_runtime(cfg, params, corpus, idx)
+    rt.serve(wl, max_new_tokens=3)
+    res = sorted(rt.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    assert any(a.exact for a in res)
+    for a, b in zip(res, seq):
+        if a.exact:
+            assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
+
+
+def test_relocated_chunks_tolerance_bounded(setup):
+    """Same docs, reversed order: relocated reuse is flagged exact=False and
+    its first-token logit divergence vs the sequential oracle is finite,
+    nonzero for at least one request (the approximation is real), and
+    accepted by the tolerance comparator at a bound it reports itself."""
+    cfg, params, corpus, base_idx, wl = setup
+    idx = FlippableIndex(base_idx)
+    rt = _chunk_runtime(cfg, params, corpus, idx)
+    rt.serve(wl, max_new_tokens=3)                # seed the chunk cache
+    idx.reverse = True
+    res = sorted(rt.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    assert rt.metrics.reloc_chunk_hits > 0
+    assert rt.metrics.reloc_recompute_tokens > 0
+    assert any(not r.exact for r in res)
+    # oracle: full recompute over the SAME reversed doc order
+    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    linfs = []
+    for a, b in zip(res, seq):
+        assert a.first_logits is not None and b.first_logits is not None
+        d = float(np.max(np.abs(np.asarray(a.first_logits, np.float64)
+                                - np.asarray(b.first_logits, np.float64))))
+        assert np.isfinite(d)
+        linfs.append(d)
+    assert max(linfs) > 0.0
+    eps = max(linfs) * 1.01 + 1e-9
+    assert token_mismatches(list(zip(res, seq)), "tol", eps) == []
+    # exact requests must still match the oracle bit-for-bit
+    for a, b in zip(res, seq):
+        if a.exact:
+            assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
+
+
+def test_huge_recompute_budget_degenerates_to_exact(setup):
+    """recompute_tokens >= every doc length: relocated hits all reclassify
+    as plain misses, so even reversed-order reuse is bit-identical."""
+    cfg, params, corpus, base_idx, wl = setup
+    idx = FlippableIndex(base_idx)
+    rt = _chunk_runtime(cfg, params, corpus, idx, recompute_tokens=10_000)
+    rt.serve(wl, max_new_tokens=3)
+    idx.reverse = True
+    res = sorted(rt.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    assert rt.metrics.reloc_chunk_hits == 0
+    assert all(r.exact for r in res)
+    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    for a, b in zip(res, seq):
+        assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
+
+
+def test_chunk_mode_block_accounting_balances(setup):
+    cfg, params, corpus, idx, wl = setup
+    rt = _chunk_runtime(cfg, params, corpus, idx)
+    rt.serve(wl, max_new_tokens=3)
+    rt.serve(wl, max_new_tokens=3)
+    rt.tree.check_invariants()
+    tree_blocks = sum(len(n.payload_gpu.blocks) for n in rt.tree.nodes()
+                      if n.in_gpu and n.payload_gpu is not None)
+    live = rt.store.pool.n_blocks - rt.store.pool.free_blocks
+    assert live == tree_blocks + 1      # +1 scratch
+    rt.store.pool.check()
+
+
+def test_chunk_mode_requires_paged(setup):
+    cfg, params, corpus, idx, _ = setup
+    with pytest.raises(ValueError, match="requires the paged engine"):
+        ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
+                          attn="dense", reuse="chunk")
+    with pytest.raises(ValueError, match="unknown reuse mode"):
+        ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
+                          reuse="suffix")

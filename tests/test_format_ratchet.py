@@ -1,61 +1,33 @@
-[tool.pytest.ini_options]
-testpaths = ["tests"]
-pythonpath = ["src"]
-markers = [
-    "slow: long-running tests (compile-heavy sharded shapes, sweeps)",
-    "multidevice: needs >= 4 visible devices (CI multidevice lane sets XLA_FLAGS=--xla_force_host_platform_device_count=4 before jax imports)",
-]
+"""Freeze the ``ruff format`` burn-down manifest (pyproject.toml).
 
-[tool.ruff]
-line-length = 88
-# floor of the CI python matrix ({3.10, 3.12} in .github/workflows/ci.yml)
-target-version = "py310"
-src = ["src"]
+The ``[tool.ruff.format].exclude`` list grandfathers pre-formatter files
+out of the blocking CI format gate.  It is a RATCHET: entries may only be
+REMOVED (after ``ruff format <file>``), never quietly added — but this
+container ships no ruff binary (offline image, see the blocker note in
+pyproject.toml), so the gate itself cannot police additions here.  This
+test does: the manifest is snapshotted below, and any NEW entry fails
+tier-1 loudly with instructions, turning a one-line append into an
+explicit, reviewable two-file change.
 
-[tool.ruff.lint]
-# pycodestyle errors + pyflakes + a few pycodestyle warnings; the CI fast
-# lane runs `ruff check .` as its first step
-select = ["E4", "E7", "E9", "F", "W"]
-ignore = [
-    "E731",  # lambda assignment — scheduler predicates are idiomatic here
-    "E741",  # ambiguous single-letter names (math-heavy kernel code)
-]
+To legitimately grow the snapshot (a new file written in the repo's
+hand-aligned house style while no ruff binary is available to verify it
+clean): add the path to BOTH pyproject.toml and ``FROZEN`` below in the
+same commit, and extend the blocker note in pyproject.toml.  To shrink
+it (the goal): ``ruff format <file>``, then delete the entry from both.
+"""
+import pathlib
 
-[tool.ruff.lint.per-file-ignores]
-# benchmark/launch drivers and tests run environment setup (jax config,
-# pytest.importorskip) before their imports
-"benchmarks/*" = ["E402"]
-"src/repro/launch/*" = ["E402"]
-"tests/*" = ["E402"]
+import pytest
 
+try:
+    import tomllib                      # py311+
+except ImportError:                     # py310 fast lane
+    tomli = pytest.importorskip("tomli")
+    tomllib = tomli
 
-[tool.ruff.format]
-# ruff format adoption is a RATCHET: `ruff format --check` is a blocking CI
-# gate (fast lane), and every file NOT in this list must stay format-clean.
-# The tree predates the formatter and uses hand-aligned continuations, so
-# the files below (incl. PR 5's, written in the same house style) are
-# frozen as a burn-down manifest — remove
-# entries as files get reformatted (`ruff format <file>`); never add new
-# ones.  (PR 5's container had no ruff binary and no network, so the gate
-# ships as a ratchet with the tree almost fully grandfathered — only
-# comment-only files are verified clean so far — instead of claiming a
-# wholesale mechanical reformat that could not be executed or verified.)
-# BURN-DOWN BLOCKED (2026-08-08, PR 6): still no ruff binary in the build
-# container (`ruff`/`python -m ruff` absent; pip install unreachable —
-# offline image), so no entry can be removed without risking the blocking
-# CI format gate on an unverifiable diff, and PR 6's new files (written in
-# the same hand-aligned house style, which the formatter rewrites) are
-# frozen below under the PR 5 precedent.  First environment with a ruff
-# binary: reformat + delete >= 5 entries.  (PR 7: same container, same
-# blocker — its new files are frozen below under the same precedent.
-# PR 8: still no ruff; its two new files are frozen below likewise.
-# PR 9: still no ruff binary (`ruff`/`python -m ruff` absent, offline
-# image); its three new files are frozen below under the same precedent —
-# AND the manifest itself is now frozen by tests/test_format_ratchet.py:
-# any entry added here without updating that test's snapshot fails
-# tier-1 loudly, so the grandfather list can only grow via an explicit,
-# reviewable two-file change instead of a quiet one-line append.)
-exclude = [
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+FROZEN = frozenset([
     "benchmarks/common.py",
     "benchmarks/fig13_overall.py",
     "benchmarks/fig_frontdoor.py",
@@ -168,4 +140,46 @@ exclude = [
     "tests/test_tpot_topk.py",
     "tests/test_traffic.py",
     "tests/test_training.py",
-]
+])
+
+
+def _manifest():
+    with open(REPO / "pyproject.toml", "rb") as f:
+        cfg = tomllib.load(f)
+    return cfg["tool"]["ruff"]["format"]["exclude"]
+
+
+def test_no_new_files_land_in_the_manifest():
+    added = set(_manifest()) - FROZEN
+    assert not added, (
+        f"NEW file(s) added to the ruff-format burn-down manifest "
+        f"([tool.ruff.format].exclude in pyproject.toml): {sorted(added)}.\n"
+        f"The manifest is a ratchet — run `ruff format <file>` and keep the "
+        f"file OUT of the exclude list. If that is genuinely impossible "
+        f"(no ruff binary in the environment), freeze it explicitly: add "
+        f"the path to FROZEN in tests/test_format_ratchet.py AND extend "
+        f"the blocker note in pyproject.toml, in the same commit.")
+
+
+def test_manifest_entries_exist():
+    """Deleted/renamed files must leave the manifest — dead entries make
+    the burn-down count lie."""
+    stale = [p for p in _manifest() if not (REPO / p).is_file()]
+    assert not stale, (f"manifest entries with no file on disk: {stale} — "
+                      f"remove them from [tool.ruff.format].exclude")
+
+
+def test_manifest_has_no_duplicates():
+    m = _manifest()
+    dupes = {p for p in m if m.count(p) > 1}
+    assert not dupes, f"duplicate manifest entries: {sorted(dupes)}"
+
+
+def test_manifest_only_shrinks_against_snapshot():
+    """Entries removed from pyproject (reformatted files — the goal!) should
+    also be pruned from FROZEN so the snapshot tracks reality."""
+    gone = FROZEN - set(_manifest())
+    assert not gone, (
+        f"FROZEN lists entries no longer in pyproject.toml: {sorted(gone)} "
+        f"— prune them from tests/test_format_ratchet.py (ratchet "
+        f"progress, keep the snapshot honest)")

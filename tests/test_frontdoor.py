@@ -11,6 +11,8 @@ Contracts (serving/frontdoor.py):
   * simulator and real driver consume the same policy objects through the
     same partition walk (PR 1/PR 4 shared-policy pattern).
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -121,6 +123,38 @@ def test_cache_rejects_bad_config():
         QueryCache(ttl=0.0)
 
 
+def test_cache_records_top_k_and_filters_shallow_exact_hits():
+    c = QueryCache(capacity=4, ttl=10.0, sim_threshold=1.0)
+    v, t = _vec(0), _toks(0)
+    c.insert(v, t, docs=(1,), answer=[5], source_req_id=0, now=0.0, top_k=1)
+    # a shallow entry serves an equally-shallow (or depth-agnostic) lookup
+    assert c.lookup(v, t, 1.0, min_top_k=1)[0] == HIT_EXACT
+    assert c.lookup(v, t, 1.0)[0] == HIT_EXACT
+    # ... but never a deeper one
+    kind, e = c.lookup(v, t, 2.0, min_top_k=2)
+    assert kind == MISS and e is None
+    assert c.stats()["depth_filtered"] == 1
+    # a full-depth reinsert upgrades the entry
+    c.insert(v, t, docs=(1, 2), answer=[5], source_req_id=1, now=3.0,
+             top_k=2)
+    kind, e = c.lookup(v, t, 4.0, min_top_k=2)
+    assert kind == HIT_EXACT and e.top_k == 2
+
+
+def test_cache_filters_shallow_similarity_hits():
+    c = QueryCache(capacity=4, ttl=1e9, sim_threshold=0.9)
+    v = _vec(0)
+    c.insert(v, _toks(0), (1,), [5], 0, now=0.0, top_k=1)
+    near = v + 0.01 * _vec(1)
+    assert c.lookup(near, _toks(1), 1.0, min_top_k=1)[0] == HIT_SIMILAR
+    # the only candidate is too shallow for the required depth
+    assert c.lookup(near, _toks(2), 2.0, min_top_k=2)[0] == MISS
+    # a deeper entry elsewhere in the cache still serves the probe
+    c.insert(v, _toks(3), (1, 2), [7], 1, now=3.0, top_k=2)
+    kind, e = c.lookup(near, _toks(4), 4.0, min_top_k=2)
+    assert kind == HIT_SIMILAR and e.top_k == 2
+
+
 # ---------------------------------------------------------------------------
 # SLO admission
 # ---------------------------------------------------------------------------
@@ -158,6 +192,35 @@ def test_admission_unknown_tenant_uses_default_and_ewma_learns():
 def test_more_active_replicas_lower_prediction():
     adm = SloAdmission({}, top_k=2, init_service=0.1)
     assert adm.predicted_ttft(8, 4) < adm.predicted_ttft(8, 1)
+
+
+def test_backlog_dominated_predictions_shed_not_degrade():
+    # queueing term 2.0s vs 0.5s target: no top_k shrinks OTHER requests'
+    # work, so the request must SHED.  (The old code scaled the WHOLE
+    # prediction by k'/k: 2.4s * 1/4 = 0.6s <= 2 x 0.5s "fit" on paper
+    # while the real queue stayed 2.0s.)
+    adm = SloAdmission({"a": TenantSLO(ttft_target=0.5, min_top_k=1)},
+                       top_k=4, init_service=0.4, shed_factor=2.0)
+    d = adm.decide("a", backlog=5, active=1)   # queue = 5 * 0.4s = 2.0s
+    assert d.action == SHED and d.top_k == 0
+
+
+def test_service_dominated_predictions_still_degrade():
+    # zero backlog, service 1.6s: the floor k=1 scales it to 0.4s — under
+    # target, so degrade (the fix must not turn every overload into a shed)
+    adm = SloAdmission({"a": TenantSLO(ttft_target=0.5, min_top_k=1)},
+                       top_k=4, init_service=1.6, shed_factor=2.0)
+    d = adm.decide("a", backlog=0, active=1)
+    assert d.action == DEGRADE and d.top_k == 1
+
+
+def test_mixed_prediction_degrades_only_within_shed_band():
+    # queue 0.6s + floor service 0.2s = 0.8s: above target but inside the
+    # 2x shed band -> the degraded floor is still admitted
+    adm = SloAdmission({"a": TenantSLO(ttft_target=0.5, min_top_k=1)},
+                       top_k=4, init_service=0.8, shed_factor=2.0)
+    d = adm.decide("a", backlog=3, active=4)   # queue = 3/4 * 0.8s = 0.6s
+    assert d.action == DEGRADE and d.top_k == 1
 
 
 # ---------------------------------------------------------------------------
@@ -305,19 +368,51 @@ def test_frontdoor_partition_hits_shed_and_misses():
 
 
 def test_frontdoor_partition_degrades_top_k_via_request_rewrite():
-    # service estimate 1s vs 0.55s target: every request degrades to the
-    # floor (and none sheds: even at backlog 2 the floor predicts
-    # 3 * 1/3 = 1.0s <= shed_factor 2 x 0.55s), and the rewritten
-    # Request carries the lowered top_k
+    # service estimate 1s vs 0.55s target at ZERO backlog: the service
+    # term alone over-runs the target, the floor k=1 fits the shed band
+    # (0 + 1/3 s <= 2 x 0.55s), and the rewritten Request carries the
+    # lowered top_k.  Backlogged arrivals shed instead — the queueing
+    # term can't be degraded away (see the SloAdmission unit tests).
     fd = _mk_fd(slos={"a": TenantSLO(ttft_target=0.55, min_top_k=1)},
                 top_k=3, init_service=1.0)
     router = ReplicaRouter([_Bare()])
-    reqs = [_req(i, arrival=float(i), seed=i, tenant="a") for i in range(3)]
+    reqs = [_req(0, arrival=0.0, seed=0, tenant="a")]
     part = frontdoor_partition(fd, router, reqs,
                                docs_of=lambda r: (0,), window=0)
     assert part.misses and all(r.top_k == 1 for r in part.misses)
     assert all(r.top_k == 0 for r in reqs)     # originals untouched
-    assert fd.degraded == 3
+    assert fd.degraded == 1
+
+
+def test_frontdoor_never_serves_degraded_answer_at_full_depth():
+    # a degraded tenant's cached answer must not serve a request admitted
+    # at full depth — for EITHER hit kind
+    fd = _mk_fd(slos={"slow": TenantSLO(ttft_target=0.55, min_top_k=1),
+                      "fast": TenantSLO(ttft_target=1e9)},
+                top_k=3, init_service=1.0, sim_threshold=0.9)
+    r0 = _req(0, tenant="slow")
+    d0 = fd.handle(r0, 0.0)
+    assert d0.kind == MISS and d0.degraded and d0.top_k == 1
+    degraded = dataclasses.replace(r0, top_k=d0.top_k)
+    fd.note_complete(degraded, docs=(1,), answer=[9], ttft=0.1, now=0.1)
+    assert fd.cache.stats()["size"] == 1
+    # exact repeat from the full-depth tenant: MISS, not a shallow hit
+    d1 = fd.handle(_req(1, seed=0, tenant="fast"), 0.2)
+    assert d1.kind == MISS
+    assert fd.cache.stats()["depth_filtered"] == 1
+    # near-duplicate (similarity probe) must miss too
+    near = dataclasses.replace(
+        _req(2, seed=0, tenant="fast"),
+        query_vec=r0.query_vec + 0.01 * _vec(1),
+        question_tokens=_toks(5))
+    assert fd.handle(near, 0.3).kind == MISS
+    # once a FULL-depth completion lands, both hit kinds serve again
+    fd.note_complete(_req(1, seed=0, tenant="fast"),
+                     docs=(1, 2, 3), answer=[7], ttft=0.1, now=0.4)
+    d3 = fd.handle(_req(3, seed=0, tenant="fast"), 0.5)
+    assert d3.kind == HIT_EXACT and d3.entry.top_k == 3
+    d4 = fd.handle(near, 0.6)
+    assert d4.kind == HIT_SIMILAR and d4.entry.top_k == 3
 
 
 def test_frontdoor_partition_autoscales_and_warms():

@@ -87,17 +87,53 @@ def _write(tmp_path, name, doc):
     return str(p)
 
 
-def test_main_missing_baseline_passes(tmp_path, capsys):
+def test_main_missing_baseline_passes_with_warning(tmp_path, capsys,
+                                                   monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
+    absent = str(tmp_path / "absent.json")
+    assert main([absent, cur]) == 0
+    out = capsys.readouterr().out
+    assert "no usable baseline" in out
+    # the pass is loud: a ::warning:: annotation names the missing baseline
+    assert "::warning" in out and absent in out
+    assert "SKIPPED" in out
+
+
+def test_main_missing_baseline_writes_step_summary(tmp_path, monkeypatch):
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
+    absent = str(tmp_path / "absent.json")
+    assert main([absent, cur]) == 0
+    text = summary.read_text()
+    assert absent in text and "SKIPPED" in text
+    # appends, never truncates (the summary file accumulates per step)
+    assert main([absent, cur]) == 0
+    assert summary.read_text().count("SKIPPED") == 2
+
+
+def test_main_missing_baseline_broken_summary_sink_still_passes(
+        tmp_path, monkeypatch):
+    # an unwritable GITHUB_STEP_SUMMARY must not flip the verdict
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(tmp_path / "no" / "dir"))
     cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
     assert main([str(tmp_path / "absent.json"), cur]) == 0
-    assert "no usable baseline" in capsys.readouterr().out
 
 
-def test_main_corrupt_baseline_passes(tmp_path):
+def test_main_corrupt_baseline_passes(tmp_path, capsys, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
     cur = _write(tmp_path, "cur.json", _doc([("fig_frontdoor/on", 100.0)]))
     assert main([str(bad), cur]) == 0
+    assert "::warning" in capsys.readouterr().out
+
+
+def test_main_present_baseline_emits_no_warning(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _doc([("fig_frontdoor/on", 100.0)]))
+    assert main([base, base]) == 0
+    assert "::warning" not in capsys.readouterr().out
 
 
 def test_main_regression_fails(tmp_path, capsys):

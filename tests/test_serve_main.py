@@ -27,6 +27,17 @@ def test_main_check_tokens_single_replica(monkeypatch, capsys):
     assert "token check: all 4 requests identical" in out
 
 
+def test_main_chunk_reuse_tolerance(monkeypatch, capsys):
+    """--reuse chunk --check-tokens tol:<eps>: the chunk-cache engine's
+    approximate outputs verify against the sequential oracle through the
+    tolerance comparator (docs/ARCHITECTURE.md §11)."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--attn", "paged", "--reuse", "chunk",
+                     "--recompute-tokens", "8", "--block-size", "8",
+                     "--check-tokens", "tol:5"])
+    assert "token check: all 4 requests within tol 5" in out
+
+
 def test_main_check_tokens_two_replicas(monkeypatch, capsys):
     """--replicas 2 --routing affinity: routing never changes computation,
     so the fleet's tokens stay bit-identical to the single sequential

@@ -122,6 +122,20 @@ def test_mesh_size_parity_tokens_and_tier_hits(monkeypatch):
 
 @multidevice
 @need4
+def test_tp2_chunk_reuse_tolerance(monkeypatch, capsys):
+    """--tp 2 --reuse chunk: relocated-chunk reuse is approximate, so the
+    sharded engine verifies against the sequential oracle through the
+    tolerance comparator instead of bit-exactness."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--tp", "2", "--attn", "paged", "--reuse", "chunk",
+                     "--recompute-tokens", "8", "--block-size", "8",
+                     "--check-tokens", "tol:5"])
+    assert "tensor parallel: tp=2" in out
+    assert "token check: all 4 requests within tol 5" in out
+
+
+@multidevice
+@need4
 def test_tp_with_paged_disk_tiers(monkeypatch, capsys):
     """Sharded pool + tiny GPU tier: demotions/promotions run through
     ShardedPagedBackend's per-shard copies and tokens stay identical."""
