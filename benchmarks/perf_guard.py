@@ -30,6 +30,7 @@ from typing import Dict, List, Tuple
 
 # analytic (simulator) TTFT rows — deterministic, safe to gate on
 TRACKED = (
+    "fig_cag/",
     "fig_frontdoor/",
     "fig_replica/",
     "fig_tp/",

@@ -30,6 +30,7 @@ MODULES = [
     "fig18_reorder",
     "fig19_speculative",
     "fig_tiered_cache",
+    "fig_cag",
     "fig_chunk_reuse",
     "fig_replica_routing",
     "fig_frontdoor",

@@ -82,6 +82,7 @@ def run_real(requests: int = 10, max_new: int = 4) -> None:
     from repro.models import model as M
     from repro.retrieval.corpus import make_corpus, make_workload
     from repro.retrieval.vectordb import IVFIndex
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import RAGServer
     from repro.serving.runtime import ContinuousRuntime
 
@@ -96,7 +97,7 @@ def run_real(requests: int = 10, max_new: int = 4) -> None:
     print(f"{'mode':>14} {'wall_s':>7} {'req/s':>6} {'ttft_ms':>8} "
           f"{'occupancy':>9}")
     t0 = time.time()
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = srv.serve(wl, max_new_tokens=max_new)
     wall = time.time() - t0
     ttft = float(np.mean([r.ttft for r in seq]))
@@ -104,9 +105,11 @@ def run_real(requests: int = 10, max_new: int = 4) -> None:
           f"{ttft * 1e3:>8.1f} {'1.00':>9}")
 
     for max_batch, chunk, budget in ((2, 0, 0), (4, 0, 0), (4, 16, 48)):
-        rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                               max_batch=max_batch, prefill_chunk=chunk,
-                               max_prefill_tokens=budget)
+        rt = ContinuousRuntime(cfg, params, corpus, idx,
+                               config=EngineConfig(
+                                   top_k=2, max_batch=max_batch,
+                                   prefill_chunk=chunk,
+                                   max_prefill_tokens=budget))
         t0 = time.time()
         res = rt.serve(wl, max_new_tokens=max_new)
         wall = time.time() - t0

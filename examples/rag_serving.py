@@ -13,6 +13,7 @@ from repro.configs import get_reduced
 from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.vectordb import IVFIndex
+from repro.serving.config import EngineConfig
 from repro.serving.engine import RAGServer
 
 cfg = get_reduced("qwen2-0.5b")
@@ -23,7 +24,7 @@ wl = make_workload(corpus, n_requests=10, rate=100.0, zipf_s=1.3,
                    question_tokens=8, vocab=cfg.vocab_size, seed=1)
 
 print("== RAGCache serving (PGDSF, reorder, speculative pipelining) ==")
-srv = RAGServer(cfg, params, corpus, index, top_k=2)
+srv = RAGServer(cfg, params, corpus, index, config=EngineConfig(top_k=2))
 res = srv.serve(wl, max_new_tokens=3)
 hits = [r for r in res if r.alpha > 0]
 print(f"hit rate: {srv.controller.doc_hit_rate:.0%} "
@@ -34,9 +35,10 @@ print(f"mean prefill: cold={cold * 1000:.0f}ms warm={warm * 1000:.0f}ms "
       f"({cold / warm:.1f}x)" if hits else "")
 
 print("\n== same workload, cache disabled (vLLM-like baseline) ==")
-base = RAGServer(cfg, params, corpus, index, top_k=2,
-                 gpu_cache_bytes=0, host_cache_bytes=0,
-                 reorder=False, speculative=False)
+base = RAGServer(cfg, params, corpus, index,
+                 config=EngineConfig(top_k=2, gpu_cache_bytes=0,
+                                     host_cache_bytes=0, reorder=False,
+                                     speculative=False))
 res_b = base.serve(wl, max_new_tokens=3)
 print(f"hit rate: {base.controller.doc_hit_rate:.0%}")
 

@@ -174,6 +174,46 @@ class RAGController:
             exact=exact_so_far,
         )
 
+    # ---- corpus preloading (--mode cag; docs/ARCHITECTURE.md §12) ----------
+
+    def preload_corpus(self, doc_ids: Sequence[int],
+                       doc_tokens: Sequence[int], payload_of=None, *,
+                       log=None, log_every: int = 64) -> dict:
+        """Pre-insert the FULL corpus KV into the tree's disk tier (CAG
+        startup).  Every doc becomes a root child via the O(1)
+        ``preload_disk`` path — no eviction scans, no transient GPU/host
+        residency — so preloading a corpus is linear in corpus size and
+        raises EvictionError loudly if the disk budget cannot hold it.
+
+        ``payload_of(doc_id, n_tokens)`` produces the host-layout KV payload
+        to spill (None = accounting-only, the simulator's mode).  ``log`` is
+        an optional progress callback called every ``log_every`` docs and at
+        the end with (docs_done, total_docs, bytes_so_far).  Returns
+        ``{"docs", "tokens", "bytes", "files", "seconds"}`` — ``files`` is
+        the number of disk segments actually written (spill hops taken;
+        already-resident docs are skipped and don't write)."""
+        tree = self.tree
+        stats = {"docs": 0, "tokens": 0, "bytes": 0, "files": 0,
+                 "seconds": 0.0}
+        total = len(doc_ids)
+        for i, (d, n_tok) in enumerate(zip(doc_ids, doc_tokens)):
+            d, n_tok = int(d), int(n_tok)
+            existing = tree.root.children.get(d)
+            if existing is not None and existing.cached:
+                continue
+            payload = payload_of(d, n_tok) if payload_of is not None else None
+            node, t = tree.preload_disk(d, n_tok, payload)
+            stats["docs"] += 1
+            stats["tokens"] += n_tok
+            stats["bytes"] += node.bytes_
+            stats["files"] += 1
+            stats["seconds"] += t
+            if log is not None and (i + 1) % log_every == 0:
+                log(i + 1, total, stats["bytes"])
+        if log is not None:
+            log(total, total, stats["bytes"])
+        return stats
+
     # ---- execution hooks ----------------------------------------------------
 
     def promote(self, plan: RequestPlan) -> float:

@@ -581,6 +581,51 @@ class KnowledgeTree:
                 node.payload_gpu = payload
         return node, cost
 
+    def preload_disk(self, doc_id: int, n_tokens: int,
+                     payload_host=None) -> Tuple[Node, float]:
+        """Bulk-insert path for corpus preloading (--mode cag): create a
+        root child DIRECTLY in the disk tier.  O(1) per doc — no eviction
+        scan, no clock churn, no transient GPU/host residency — where
+        ``insert`` + demotion cascades would run a full-tree ``_tier_leaves``
+        post-order walk per node (the bulk-insert pathology: O(corpus^2) to
+        preload a corpus).  Preloading never evicts: inserting beyond
+        ``disk_capacity`` raises EvictionError loudly instead of thrashing
+        the cascade.  ``payload_host`` is the host-layout KV payload the
+        backend's ``spill`` hop writes to disk (the host copy is freed after
+        the write — the node lands disk-only, promoted on demand later).
+        Returns (node, spill_seconds)."""
+        if self._capacity[DISK] <= 0:
+            raise ValueError(
+                "preload_disk requires a disk tier (disk_capacity > 0)")
+        node = self.root.children.get(doc_id)
+        if node is not None and node.cached:
+            return node, 0.0            # already resident somewhere: no-op
+        if node is None:
+            node = Node(doc_id=doc_id, parent=self.root, n_tokens=n_tokens,
+                        bytes_=n_tokens * self.bytes_per_token)
+        if self._used[DISK] + node.bytes_ > self._capacity[DISK]:
+            raise EvictionError(
+                f"corpus preload overflows the disk tier: doc {doc_id} "
+                f"({node.bytes_} B) does not fit "
+                f"({self._used[DISK]}/{self._capacity[DISK]} B used); "
+                f"raise --disk-cache-bytes to hold the whole corpus")
+        node.payload_host = payload_host
+        t = self.backend.spill(node)
+        self.backend.free_host(node)
+        node.in_disk = True
+        node.spilled_once = True        # the disk file is the live copy
+        self._used[DISK] += node.bytes_
+        self.stats["spill_bytes"] += node.bytes_
+        self.stats["spill_seconds"] += t
+        # chunk-cache metadata: preloaded KV is computed at position 0 with
+        # no preceding docs — exactly what commit_chunks records for a doc
+        # computed first — so --reuse chunk composes with CAG preloads
+        node.src_prefix = ()
+        node.exact_ctx = True
+        node.priority = self.policy.priority(node, self._clocks[DISK])
+        self.root.children[doc_id] = node
+        return node, t
+
     def fetch_to_host(self, node: Node, *, strict: bool = False,
                       pinned: Optional[Set[Node]] = None) -> float:
         """Stage a disk-resident node into the host tier (the first hop of a

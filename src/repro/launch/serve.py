@@ -56,6 +56,7 @@ engine (recurrent state cannot be paged per-block).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -85,6 +86,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--docs", type=int, default=50)
     ap.add_argument("--doc-tokens", type=int, default=32)
     ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--mode", default="rag", choices=["rag", "cag"],
+                    help="workload mode (docs/ARCHITECTURE.md §12): 'rag' "
+                         "runs staged retrieval per request; 'cag' "
+                         "(cache-augmented generation) pre-inserts the FULL "
+                         "corpus KV into the knowledge tree's disk tier at "
+                         "startup and serves with zero retrieval stages — "
+                         "docs resolve as tier hits promoted through the "
+                         "PGDSF cascade.  Needs --disk-cache-bytes sized "
+                         "for the whole corpus (0 = auto-size it)")
     ap.add_argument("--policy", default="pgdsf",
                     choices=["pgdsf", "gdsf", "lru", "lfu"])
     ap.add_argument("--gpu-cache-bytes", type=int, default=64 * 2**20,
@@ -116,6 +126,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="affinity escape hatch: max allowed max-min "
                          "per-replica queue-depth skew before a request "
                          "escapes to the least-loaded replica")
+    ap.add_argument("--max-shadow-paths", type=int, default=4096,
+                    help="bound on the router's shadow ledger of "
+                         "per-replica routed doc-set paths (affinity "
+                         "routing state, evicted LRU)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="tokens per prefill chunk (0 = unchunked); applies "
                          "to BOTH engines so --check-tokens compares "
@@ -335,6 +349,7 @@ def serve_sequential(cfg, params, corpus, idx, wl, args, econf=None):
     # --check-tokens compares sharded continuous vs unsharded sequential.
     econf = econf if econf is not None else EngineConfig.from_args(args)
     srv = RAGServer(cfg, params, corpus, idx, config=econf)
+    _print_preload(srv)
     t0 = time.time()
     results = srv.serve(wl, max_new_tokens=args.max_new_tokens)
     wall = time.time() - t0
@@ -355,6 +370,16 @@ def serve_sequential(cfg, params, corpus, idx, wl, args, econf=None):
     return results
 
 
+def _print_preload(engine, n_replicas: int = 1) -> None:
+    """One-line CAG corpus-preload summary (docs/ARCHITECTURE.md §12)."""
+    ps = getattr(engine, "preload_stats", None)
+    if ps:
+        per = f" per replica x{n_replicas}" if n_replicas > 1 else ""
+        print(f"[cag] preloaded {ps['docs']} docs / {ps['tokens']} tokens "
+              f"({ps['bytes']} B) into the disk tier in "
+              f"{ps['seconds']:.2f}s{per}")
+
+
 def make_runtimes(cfg, params, corpus, idx, args, n, econf=None):
     econf = econf if econf is not None else EngineConfig.from_args(args)
     return [ContinuousRuntime(cfg, params, corpus, idx, config=econf)
@@ -367,6 +392,7 @@ def serve_continuous(cfg, params, corpus, idx, wl, args, econf=None,
     fleet_conf = (fleet_conf if fleet_conf is not None
                   else FleetConfig.from_args(args))
     rts = make_runtimes(cfg, params, corpus, idx, args, n, econf=econf)
+    _print_preload(rts[0], n)
     router = ReplicaRouter(rts, config=fleet_conf)
     # partition the trace in arrival order by the request's retrieved docs
     # (deterministic, equal to the runtime's final staged-search result);
@@ -444,6 +470,7 @@ def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args, econf=None,
     fleet_conf = (fleet_conf if fleet_conf is not None
                   else FleetConfig.from_args(args))
     rts = make_runtimes(cfg, params, corpus, idx, args, n, econf=econf)
+    _print_preload(rts[0], n)
     router = ReplicaRouter(rts, config=fleet_conf)
     fd = build_frontdoor(args, tenants, fdc=fdc)
     part = frontdoor_partition(
@@ -486,8 +513,9 @@ def serve_frontdoor(cfg, params, corpus, idx, wl, tenants, args, econf=None,
 def main() -> None:
     args = build_parser().parse_args()
     # the config dataclasses are built ONCE from argparse here and threaded
-    # through every constructor below (the loose-kwargs path stays for
-    # library callers but is deprecated; see serving/config.py)
+    # through every constructor below — config= is the SOLE constructor
+    # API; loose kwargs raise TypeError (serving/config.py,
+    # docs/ARCHITECTURE.md §10)
     econf = EngineConfig.from_args(args)
     fleet_conf = FleetConfig.from_args(args)
     fdc = FrontDoorConfig.from_args(args)
@@ -501,6 +529,15 @@ def main() -> None:
     cfg, params, corpus, idx, wl, tenants = make_setup(args)
     print(f"model={cfg.name} family={cfg.family} layers={cfg.n_layers} "
           f"d_model={cfg.d_model}")
+    if args.mode == "cag" and econf.disk_cache_bytes == 0 \
+            and cfg.family not in ("ssm", "hybrid"):
+        # auto-size the disk tier to hold the whole corpus KV exactly
+        kv_bytes = max(1, 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+                       * np.dtype(cfg.jdtype).itemsize)
+        need = int(corpus.doc_lengths.sum()) * kv_bytes
+        econf = dataclasses.replace(econf, disk_cache_bytes=need)
+        print(f"[cag] --disk-cache-bytes 0 -> auto-sized to {need} B "
+              f"({len(corpus.doc_lengths)} docs, {kv_bytes} B/token)")
     if econf.mesh.tp > 1:
         print(f"tensor parallel: tp={econf.mesh.tp} over a "
               f"(1, {econf.mesh.tp}) mesh "

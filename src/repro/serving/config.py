@@ -17,10 +17,11 @@ simulator constructors.
   * ``FrontDoorConfig`` — query cache / SLO admission / autoscaler knobs
                           (the PR 6 layer)
 
-The loose-kwargs constructor paths on ``ContinuousRuntime`` / ``RAGServer``
-still work (no runtime warning — CI treats repro-raised warnings as errors)
-but are DEPRECATED: see the migration note in docs/ARCHITECTURE.md §10.
-New call sites should pass ``config=EngineConfig(...)``.
+``config=`` is the SOLE constructor API: the loose-kwargs paths on
+``ContinuousRuntime`` / ``RAGServer`` / ``ReplicaRouter`` / ``FrontDoor``
+were deleted (this PR finished the PR 7 migration).  Passing a legacy
+kwarg raises ``TypeError`` naming the config field that replaced it —
+see the migration note in docs/ARCHITECTURE.md §10.
 
 Every config round-trips through the CLI: ``from_args(parse(to_cli()))``
 is the identity (property-tested for MeshConfig in
@@ -31,6 +32,33 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
+
+
+def reject_legacy_kwargs(ctor: str, kwargs: dict, config_cls,
+                         aliases: Optional[dict] = None) -> None:
+    """Fail loudly on pre-PR 7 loose constructor kwargs.
+
+    ``config=`` is the sole constructor API now; every stray kwarg raises a
+    TypeError that names the config field replacing it (``aliases`` maps
+    renamed kwargs, e.g. ReplicaRouter's ``policy`` -> FleetConfig.routing).
+    """
+    if not kwargs:
+        return
+    aliases = aliases or {}
+    fields = {f.name for f in dataclasses.fields(config_cls)}
+    hints = []
+    for k in sorted(kwargs):
+        field = aliases.get(k, k)
+        if field in fields:
+            hints.append(f"{k!r} -> pass config="
+                         f"{config_cls.__name__}(..., {field}=...)")
+        else:
+            hints.append(f"{k!r} (no {config_cls.__name__} equivalent)")
+    raise TypeError(
+        f"{ctor}() got unexpected keyword argument(s): the loose-kwargs "
+        f"constructor path was removed — config={config_cls.__name__}(...) "
+        f"is the sole API (docs/ARCHITECTURE.md §10).  "
+        + "; ".join(hints))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +115,14 @@ class EngineConfig:
     # (approximate — verify with --check-tokens tol:<eps>).
     reuse: str = "prefix"
     recompute_tokens: int = 16
+    # Workload mode (docs/ARCHITECTURE.md §12): "rag" = classic staged
+    # retrieval per request; "cag" = cache-augmented generation — the FULL
+    # corpus KV is preloaded into the knowledge tree at startup (disk-tier
+    # resident, promoted on demand through the PGDSF cascade) and requests
+    # serve with ZERO retrieval stages (doc resolution is one synchronous
+    # deterministic index probe at arrival).  Requires a disk tier
+    # (disk_cache_bytes > 0) big enough for the whole corpus.
+    mode: str = "rag"
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
 
     def __post_init__(self):
@@ -96,6 +132,10 @@ class EngineConfig:
                 f"got {self.reuse!r}")
         if self.recompute_tokens < 0:
             raise ValueError("EngineConfig.recompute_tokens must be >= 0")
+        if self.mode not in ("rag", "cag"):
+            raise ValueError(
+                f"EngineConfig.mode must be 'rag' or 'cag', "
+                f"got {self.mode!r}")
 
     @classmethod
     def from_args(cls, args) -> "EngineConfig":
@@ -117,6 +157,7 @@ class EngineConfig:
             search_time_scale=args.search_scale,
             reuse=getattr(args, "reuse", "prefix"),
             recompute_tokens=getattr(args, "recompute_tokens", 16),
+            mode=getattr(args, "mode", "rag"),
             mesh=MeshConfig.from_args(args),
         )
 
@@ -132,7 +173,8 @@ class EngineConfig:
                "--block-size", str(self.block_size), "--attn", self.attn,
                "--search-scale", str(self.search_time_scale),
                "--reuse", self.reuse,
-               "--recompute-tokens", str(self.recompute_tokens)]
+               "--recompute-tokens", str(self.recompute_tokens),
+               "--mode", self.mode]
         if self.disk_cache_dir is not None:
             out += ["--disk-cache-dir", self.disk_cache_dir]
         if not self.reorder:
@@ -148,15 +190,20 @@ class FleetConfig:
     replicas: int = 1
     routing: str = "affinity"
     max_queue_skew: int = 4
+    # shadow-ledger bound of the router's per-replica routed-docs sets
+    # (serving/router.py); was a loose ReplicaRouter kwarg before this PR
+    max_shadow_paths: int = 4096
 
     @classmethod
     def from_args(cls, args) -> "FleetConfig":
         return cls(replicas=max(1, args.replicas), routing=args.routing,
-                   max_queue_skew=args.max_queue_skew)
+                   max_queue_skew=args.max_queue_skew,
+                   max_shadow_paths=getattr(args, "max_shadow_paths", 4096))
 
     def to_cli(self) -> Tuple[str, ...]:
         return ("--replicas", str(self.replicas), "--routing", self.routing,
-                "--max-queue-skew", str(self.max_queue_skew))
+                "--max-queue-skew", str(self.max_queue_skew),
+                "--max-shadow-paths", str(self.max_shadow_paths))
 
 
 @dataclasses.dataclass(frozen=True)

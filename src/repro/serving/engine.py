@@ -32,7 +32,7 @@ from repro.kvcache.paged import make_disk_store
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.retrieval.corpus import Corpus, Request
-from repro.serving.config import EngineConfig
+from repro.serving.config import EngineConfig, reject_legacy_kwargs
 from repro.serving.scheduler import prefill_piece_sizes
 
 
@@ -98,35 +98,31 @@ class RAGServer:
         corpus: Corpus,
         index,
         *,
-        gpu_cache_bytes: int = 64 * 2**20,
-        host_cache_bytes: int = 512 * 2**20,
-        disk_cache_bytes: int = 0,
-        disk_cache_dir: Optional[str] = None,
-        policy: str = "pgdsf",
-        top_k: int = 2,
-        reorder: bool = True,
-        reorder_window: int = 32,
-        speculative: bool = True,
-        max_prefill_bs: int = 4,
-        prefill_chunk: int = 0,
-        profiler: Optional[CostProfiler] = None,
         config: Optional[EngineConfig] = None,
+        reorder_window: int = 32,
+        profiler: Optional[CostProfiler] = None,
+        **legacy,
     ):
-        # EngineConfig path (serving/config.py); the loose kwargs remain
-        # for compatibility but are deprecated (docs/ARCHITECTURE.md §10).
-        # The sequential engine deliberately IGNORES config.mesh: it is the
-        # single-device token oracle every TP/replica configuration is
-        # checked against (--check-tokens).
-        if config is not None:
-            gpu_cache_bytes = config.gpu_cache_bytes
-            host_cache_bytes = config.host_cache_bytes
-            disk_cache_bytes = config.disk_cache_bytes
-            disk_cache_dir = config.disk_cache_dir
-            policy = config.policy
-            top_k = config.top_k
-            reorder = config.reorder
-            speculative = config.speculative
-            prefill_chunk = config.prefill_chunk
+        # ``config=`` is the SOLE constructor API (serving/config.py); the
+        # pre-PR 7 loose-kwargs path is gone and any stray kwarg raises a
+        # TypeError naming the EngineConfig field that replaced it.
+        # ``reorder_window`` / ``profiler`` stay explicit: they take live
+        # objects / test-only shapes that don't belong in a CLI-round-trip
+        # config.  The sequential engine deliberately IGNORES config.mesh:
+        # it is the single-device token oracle every TP/replica
+        # configuration is checked against (--check-tokens).
+        reject_legacy_kwargs("RAGServer", legacy, EngineConfig)
+        config = config if config is not None else EngineConfig()
+        gpu_cache_bytes = config.gpu_cache_bytes
+        host_cache_bytes = config.host_cache_bytes
+        disk_cache_bytes = config.disk_cache_bytes
+        disk_cache_dir = config.disk_cache_dir
+        policy = config.policy
+        top_k = config.top_k
+        reorder = config.reorder
+        speculative = config.speculative
+        max_prefill_bs = config.max_prefill_bs
+        prefill_chunk = config.prefill_chunk
         self.cfg = cfg
         self.params = params
         self.corpus = corpus
@@ -143,6 +139,13 @@ class RAGServer:
             kv_bytes = 4  # state nodes are O(1); bill ~per-token trivially
         if cfg.family in ("ssm", "hybrid"):
             disk_cache_bytes = 0   # recurrent snapshots are not {k, v} dicts
+        self.mode = config.mode
+        if self.mode == "cag" and disk_cache_bytes <= 0:
+            raise ValueError(
+                "mode='cag' preloads the whole corpus KV into the disk tier "
+                "and needs disk_cache_bytes > 0 sized for the corpus"
+                + (" (recurrent-state families have no disk tier)"
+                   if cfg.family in ("ssm", "hybrid") else ""))
         self.disk = make_disk_store(disk_cache_dir, disk_cache_bytes)
         self.tree = KnowledgeTree(
             gpu_cache_bytes, host_cache_bytes,
@@ -161,6 +164,24 @@ class RAGServer:
                                               prefix_cache=pc, prefix_len=pl),
             static_argnames=("pl",))
         self.results: List[ServeResult] = []
+        # CAG startup (docs/ARCHITECTURE.md §12): pre-insert the FULL corpus
+        # KV into the disk tier — each doc's KV computed at position 0 with
+        # no prefix (exactly what the engine computes for a doc served
+        # first), so the preloaded states are bit-identical to RAG-computed
+        # ones and --check-tokens holds unchanged.
+        self.preload_stats: Optional[dict] = None
+        if self.mode == "cag":
+            self.preload_stats = self.controller.preload_corpus(
+                range(len(corpus.doc_lengths)), corpus.doc_lengths,
+                self._corpus_payload)
+
+    def _corpus_payload(self, doc_id: int, n_tokens: int) -> dict:
+        """Host-layout {k, v} KV of one corpus doc, computed standalone
+        (position 0, no prefix) through the engine's own prefill path."""
+        toks = self.corpus.doc_tokens[doc_id]
+        _, cache, _ = self._prefill_segment(toks, None, 0)
+        seg = self._extract_payload(cache, 0, len(toks))
+        return jax.tree.map(np.asarray, seg)
 
     # ---- payload plumbing -------------------------------------------------
 
@@ -218,13 +239,20 @@ class RAGServer:
 
     def _serve_one(self, r: Request, docs: Tuple[int, ...],
                    max_new_tokens: int) -> ServeResult:
-        # 1. staged retrieval + speculative-pipelining decisions (logical)
-        t0 = time.perf_counter()
-        spec = SpecState(r.req_id)
-        for stage in self.index.staged_search(r.query_vec, self._top_k_of(r)):
-            self.spec_ctl.on_stage(spec, tuple(stage.topk), 0,
-                                   is_final=stage.is_final)
-        search_time = time.perf_counter() - t0
+        # 1. staged retrieval + speculative-pipelining decisions (logical).
+        #    CAG mode (docs/ARCHITECTURE.md §12) runs ZERO retrieval stages:
+        #    docs were already resolved by the one synchronous index probe
+        #    at arrival, so the staged walk (and its speculative decisions)
+        #    degenerates away and search_time is identically 0.
+        search_time = 0.0
+        if self.mode != "cag":
+            t0 = time.perf_counter()
+            spec = SpecState(r.req_id)
+            for stage in self.index.staged_search(r.query_vec,
+                                                  self._top_k_of(r)):
+                self.spec_ctl.on_stage(spec, tuple(stage.topk), 0,
+                                       is_final=stage.is_final)
+            search_time = time.perf_counter() - t0
 
         doc_tokens = [int(self.corpus.doc_lengths[d]) for d in docs]
         plan = self.controller.plan(docs, doc_tokens, len(r.question_tokens))

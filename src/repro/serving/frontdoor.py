@@ -85,10 +85,11 @@ class CacheEntry:
     created: float                 # insertion time (TTL anchors here —
     #                                a hit never refreshes freshness, so
     #                                staleness is bounded by exactly ttl)
-    top_k: int = 0                 # retrieval depth the answer was
-    #                                generated with (0 = unknown/legacy);
-    #                                a lookup demanding more depth must
-    #                                NOT be served this entry
+    top_k: int                     # effective retrieval depth the answer
+    #                                was generated with (>= 1, always
+    #                                recorded explicitly); a lookup
+    #                                demanding more depth must NOT be
+    #                                served this entry
 
 
 class QueryCache:
@@ -148,8 +149,9 @@ class QueryCache:
 
         ``min_top_k``: required retrieval depth — an entry whose recorded
         ``top_k`` is below it is invisible to BOTH probes (a degraded
-        tenant's answer must never serve a full-depth request).  Entries
-        with ``top_k == 0`` (unknown/legacy) only satisfy ``min_top_k == 0``.
+        tenant's answer must never serve a full-depth request).  Every
+        entry records its effective depth explicitly (>= 1), so there is
+        no unknown/legacy case to special-case here.
         """
         self._expire(now)
         key = query_key(question_tokens)
@@ -186,7 +188,11 @@ class QueryCache:
     def insert(self, query_vec: np.ndarray, question_tokens,
                docs: Sequence[int], answer: Sequence[int],
                source_req_id: int, now: float, *,
-               top_k: int = 0) -> CacheEntry:
+               top_k: int) -> CacheEntry:
+        if top_k < 1:
+            raise ValueError(
+                "CacheEntry.top_k records the EFFECTIVE retrieval depth and "
+                "must be >= 1 (the 0 = unknown/legacy sentinel is retired)")
         self._expire(now)
         key = query_key(question_tokens)
         vec = np.asarray(query_vec, np.float32)
@@ -429,7 +435,16 @@ class FrontDoor:
     LOOKUP_SECONDS = 2e-4
 
     def __init__(self, cache: QueryCache, admission: SloAdmission,
-                 autoscaler: Optional[FleetAutoscaler] = None):
+                 autoscaler: Optional[FleetAutoscaler] = None, **legacy):
+        if legacy:
+            # assembled-objects API: knobs live in the components, built
+            # from FrontDoorConfig via make_frontdoor() — loose kwargs here
+            # were never a config channel and fail loudly naming it
+            raise TypeError(
+                f"FrontDoor() takes (cache, admission, autoscaler) only; "
+                f"unexpected kwarg(s) {sorted(legacy)} — build the stack "
+                f"from FrontDoorConfig via make_frontdoor() "
+                f"(serving/config.py; docs/ARCHITECTURE.md §10)")
         self.cache = cache
         self.admission = admission
         self.autoscaler = autoscaler

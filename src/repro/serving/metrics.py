@@ -112,6 +112,9 @@ class ServingMetrics:
         self.iterations: List[tuple] = []
         self.wasted_prefills = 0
         self.spec_prefills = 0
+        # staged-retrieval events processed (one per search stage).  CAG
+        # mode's zero-retrieval-stage invariant asserts this stays 0.
+        self.retrieval_stages = 0
         self.preemptions = 0
         self.blocks_shared = 0         # tree blocks refcounted into tables
         self.blocks_copied = 0         # unaligned doc tokens re-put privately
@@ -176,6 +179,7 @@ class ServingMetrics:
             "max_decode_batch": max(decode_batches, default=0),
             "speculative_hits": spec_hits,
             "speculative_prefills": self.spec_prefills,
+            "retrieval_stages": self.retrieval_stages,
             "wasted_prefills": self.wasted_prefills,
             "preemptions": self.preemptions,
             "prefill_chunks": int(sum(chunk_counts)),

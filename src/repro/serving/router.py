@@ -53,6 +53,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.config import FleetConfig, reject_legacy_kwargs
+
 AFFINITY = "affinity"
 ROUND_ROBIN = "round_robin"
 LEAST_LOADED = "least_loaded"
@@ -104,14 +106,18 @@ class ReplicaRouter:
     """
 
     def __init__(self, replicas: Sequence[object], *,
-                 policy: str = AFFINITY, max_queue_skew: int = 4,
-                 max_shadow_paths: int = 4096, config=None):
-        # FleetConfig path (serving/config.py::FleetConfig): the replica
-        # *count* stays the caller's job (it owns the engine list); the
-        # router takes its policy knobs from the config when given.
-        if config is not None:
-            policy = config.routing
-            max_queue_skew = config.max_queue_skew
+                 config=None, **legacy):
+        # ``config=FleetConfig(...)`` is the SOLE constructor API: the
+        # replica *count* stays the caller's job (it owns the engine list);
+        # the router takes policy / max_queue_skew / max_shadow_paths from
+        # the config.  Pre-PR 7 loose kwargs raise a TypeError naming the
+        # FleetConfig field that replaced them.
+        reject_legacy_kwargs("ReplicaRouter", legacy, FleetConfig,
+                             aliases={"policy": "routing"})
+        config = config if config is not None else FleetConfig()
+        policy = config.routing
+        max_queue_skew = config.max_queue_skew
+        max_shadow_paths = config.max_shadow_paths
         if not replicas:
             raise ValueError("router needs at least one replica")
         if policy not in ROUTING_POLICIES:

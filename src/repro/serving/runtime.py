@@ -82,7 +82,8 @@ from repro.kvcache.paged import (DiskSegmentStore, OutOfBlocks, PagedKVStore,
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.sharding import (assert_tp_compatible, pool_kv_spec,
                                    serving_param_shardings)
-from repro.serving.config import EngineConfig, MeshConfig
+from repro.serving.config import (EngineConfig, MeshConfig,
+                                  reject_legacy_kwargs)
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -306,53 +307,39 @@ class ContinuousRuntime:
         corpus: Corpus,
         index,
         *,
-        gpu_cache_bytes: int = 64 * 2**20,
-        host_cache_bytes: int = 512 * 2**20,
-        disk_cache_bytes: int = 0,
-        disk_cache_dir: Optional[str] = None,
-        policy: str = "pgdsf",
-        top_k: int = 2,
-        reorder: bool = True,
-        reorder_window: int = 32,
-        speculative: bool = True,
-        max_batch: int = 4,
-        max_prefill_bs: int = 4,
-        prefill_chunk: int = 0,
-        max_prefill_tokens: int = 0,
-        block_size: int = 16,
-        n_blocks: Optional[int] = None,
-        attn: str = "auto",
-        attn_impl: Optional[str] = None,
-        reuse: str = "prefix",
-        recompute_tokens: int = 16,
-        search_time_scale: float = 1.0,
-        profiler: Optional[CostProfiler] = None,
-        mesh: Optional[MeshConfig] = None,
         config: Optional[EngineConfig] = None,
+        n_blocks: Optional[int] = None,
+        reorder_window: int = 32,
+        profiler: Optional[CostProfiler] = None,
+        **legacy,
     ):
-        # EngineConfig path (serving/config.py): one frozen object carries
-        # the whole knob surface.  The loose kwargs above remain for
-        # compatibility but are deprecated — docs/ARCHITECTURE.md §10.
-        if config is not None:
-            gpu_cache_bytes = config.gpu_cache_bytes
-            host_cache_bytes = config.host_cache_bytes
-            disk_cache_bytes = config.disk_cache_bytes
-            disk_cache_dir = config.disk_cache_dir
-            policy = config.policy
-            top_k = config.top_k
-            reorder = config.reorder
-            speculative = config.speculative
-            max_batch = config.max_batch
-            max_prefill_bs = config.max_prefill_bs
-            prefill_chunk = config.prefill_chunk
-            max_prefill_tokens = config.max_prefill_tokens
-            block_size = config.block_size
-            attn = config.attn
-            attn_impl = config.attn_impl
-            reuse = config.reuse
-            recompute_tokens = config.recompute_tokens
-            search_time_scale = config.search_time_scale
-            mesh = config.mesh
+        # ``config=`` is the SOLE constructor API (serving/config.py): one
+        # frozen EngineConfig carries the whole knob surface, and any
+        # pre-PR 7 loose kwarg raises a TypeError naming the config field
+        # that replaced it.  ``n_blocks`` / ``reorder_window`` /
+        # ``profiler`` stay explicit kwargs: they take test-only shapes or
+        # live objects that don't belong in a CLI-round-trip config.
+        reject_legacy_kwargs("ContinuousRuntime", legacy, EngineConfig)
+        config = config if config is not None else EngineConfig()
+        gpu_cache_bytes = config.gpu_cache_bytes
+        host_cache_bytes = config.host_cache_bytes
+        disk_cache_bytes = config.disk_cache_bytes
+        disk_cache_dir = config.disk_cache_dir
+        policy = config.policy
+        top_k = config.top_k
+        reorder = config.reorder
+        speculative = config.speculative
+        max_batch = config.max_batch
+        max_prefill_bs = config.max_prefill_bs
+        prefill_chunk = config.prefill_chunk
+        max_prefill_tokens = config.max_prefill_tokens
+        block_size = config.block_size
+        attn = config.attn
+        attn_impl = config.attn_impl
+        reuse = config.reuse
+        recompute_tokens = config.recompute_tokens
+        search_time_scale = config.search_time_scale
+        mesh = config.mesh
         if cfg.family in ("ssm", "hybrid"):
             raise ValueError(
                 "recurrent-state families cannot be paged per-block; "
@@ -374,6 +361,11 @@ class ContinuousRuntime:
                              "(--attn paged/auto)")
         self.reuse = reuse
         self.recompute_tokens = int(recompute_tokens)
+        self.mode = config.mode
+        if self.mode == "cag" and disk_cache_bytes <= 0:
+            raise ValueError(
+                "mode='cag' preloads the whole corpus KV into the disk tier "
+                "and needs disk_cache_bytes > 0 sized for the corpus")
         self.cfg = cfg
         self.corpus = corpus
         self.index = index
@@ -392,6 +384,11 @@ class ContinuousRuntime:
         self.mesh_cfg = mesh or MeshConfig()
         self._mesh = None
         self._kv_sharding = None
+        # CAG preloads compute each doc's KV through the single-device dense
+        # prefill on the PRE-shard params (bit-identical to the sequential
+        # oracle by construction); the sharded pool re-shards host copies on
+        # promote, so the preloaded tier bytes work at any tp
+        self._preload_params = params
         if self.mesh_cfg.tp > 1:
             assert_tp_compatible(cfg, self.mesh_cfg.tp)
             self._mesh = make_serving_mesh(self.mesh_cfg.tp)
@@ -462,6 +459,23 @@ class ContinuousRuntime:
         self._force_decode = False         # progress guard after a
                                            # pagination failure (see below)
         self._all: List[_ReqRun] = []
+        # CAG startup (docs/ARCHITECTURE.md §12): pre-insert the FULL corpus
+        # KV into the disk tier.  Each doc's KV is computed at position 0
+        # with no prefix — exactly what the engine computes for a doc served
+        # first — so preloaded states are bit-identical to RAG-computed ones
+        # and --check-tokens holds unchanged.
+        self.preload_stats: Optional[dict] = None
+        if self.mode == "cag":
+            self.preload_stats = self.controller.preload_corpus(
+                range(len(corpus.doc_lengths)), corpus.doc_lengths,
+                self._corpus_payload)
+
+    def _corpus_payload(self, doc_id: int, n_tokens: int) -> dict:
+        """Host-layout (L, 1, T, KV, hd) {k, v} KV of one corpus doc,
+        computed standalone through the dense prefill on pre-shard params."""
+        toks = jnp.asarray(self.corpus.doc_tokens[doc_id])[None]
+        _, cache = self._prefill_fn(self._preload_params, toks, None, 0)
+        return {"k": np.asarray(cache["k"]), "v": np.asarray(cache["v"])}
 
     # ------------------------------------------------------------------
     # scheduler callbacks
@@ -576,15 +590,34 @@ class ContinuousRuntime:
         st = _ReqRun(r=r, tl=tl, spec=SpecState(r.req_id),
                      remaining=self.max_new_tokens)
         self._all.append(st)
-        # materialize stages, measuring the real scan cost of each stage;
-        # the per-request search lane advances by max(measured, analytic)
-        t = self.now
         # per-request top_k override (Request.top_k > 0): the front door's
         # SLO admission degrades requests by lowering retrieval depth; both
         # engines honor it so degraded misses stay bit-identical under
         # --check-tokens.  Degradation only ever LOWERS top_k, so the
         # serve()-time max_ctx sizing (self.top_k) stays an upper bound.
         k = min(r.top_k, self.top_k) if r.top_k > 0 else self.top_k
+        if self.mode == "cag":
+            # ZERO retrieval stages (docs/ARCHITECTURE.md §12): the corpus
+            # KV is already resident, so doc resolution is one synchronous
+            # deterministic index probe, the retrieval/prefill-overlap
+            # machinery degenerates (no stage events, no speculative
+            # prefills, search_time identically 0), and the single final
+            # job enters the scheduler at arrival.
+            docs = tuple(int(d) for d in self.index.search(r.query_vec, k))
+            st.tl.search_end = self.now
+            st.final_docs = docs
+            job = _Job(req=st, docs=docs, speculative=False,
+                       enqueued=self.now)
+            st.jobs.append(job)
+            cached, compute = self._job_lens(job)
+            self.sched.submit(job, cached, compute)
+            self._prefetch_disk(docs)
+            st.tl.queue_enter = self.now
+            self._engine_kick()
+            return
+        # materialize stages, measuring the real scan cost of each stage;
+        # the per-request search lane advances by max(measured, analytic)
+        t = self.now
         it = iter(self.index.staged_search(r.query_vec, k))
         while True:
             t0 = time.perf_counter()
@@ -598,6 +631,7 @@ class ContinuousRuntime:
 
     def _on_stage(self, payload) -> None:
         st, stage = payload
+        self.metrics.retrieval_stages += 1
         docs = tuple(stage.topk)
         if stage.is_final:
             st.tl.search_end = self.now

@@ -39,6 +39,7 @@ from repro.core.knowledge_tree import CacheBackend, KnowledgeTree
 from repro.core.profiler import CostProfiler, HardwareProfile
 from repro.core.speculative import SpecState, SpeculativeController
 from repro.retrieval.corpus import Corpus, Request
+from repro.serving.config import FleetConfig
 from repro.serving.router import AFFINITY, ReplicaRouter, partition_requests
 from repro.serving.scheduler import (DECODE, PREFILL,
                                      ContinuousBatchScheduler,
@@ -92,11 +93,22 @@ class SimConfig:
                                    # the real runtime)
     block_size: int = 16           # KV page size effective_recompute aligns
                                    # to; mirrors the runtime's paged pool
+    mode: str = "rag"              # "rag" = staged retrieval per request;
+                                   # "cag" = full corpus KV preloaded into
+                                   # the disk tier at startup, zero
+                                   # retrieval stages per request (mirrors
+                                   # EngineConfig.mode; ARCHITECTURE §12)
 
     def __post_init__(self):
         if self.reuse not in ("prefix", "chunk"):
             raise ValueError(f"SimConfig.reuse must be 'prefix' or 'chunk', "
                              f"got {self.reuse!r}")
+        if self.mode not in ("rag", "cag"):
+            raise ValueError(f"SimConfig.mode must be 'rag' or 'cag', "
+                             f"got {self.mode!r}")
+        if self.mode == "cag" and self.disk_cache_bytes <= 0:
+            raise ValueError("SimConfig.mode='cag' preloads the corpus into "
+                             "the disk tier and needs disk_cache_bytes > 0")
 
 
 @dataclasses.dataclass
@@ -124,6 +136,8 @@ class SimMetrics:
                                        # to mid-prefill cancellation
     prefill_iterations: int = 0
     avg_prefill_batch: float = 0.0     # chunks packed per prefill iteration
+    retrieval_stages: int = 0          # staged-search events processed
+                                       # (CAG invariant: exactly 0)
     ttfts: List[float] = dataclasses.field(default_factory=list, repr=False)
     # TTFTs of requests whose final plan hit at least one disk-resident
     # node — the tiered-cache benchmark's headline population
@@ -246,6 +260,15 @@ class RAGSimulator:
         self.chunks_cancelled = 0
         self.chunk_tokens_saved = 0
         self.prefill_batches: List[int] = []   # chunks packed per iteration
+        self.retrieval_stages = 0
+        # CAG startup: pre-insert every doc into the disk tier (payloads are
+        # byte counts in the simulator) — same preload contract as the real
+        # engines, so sim and runtime share the residency policy exactly
+        self.preload_stats: Optional[dict] = None
+        if cfg.mode == "cag":
+            self.preload_stats = self.controller.preload_corpus(
+                range(len(corpus.doc_lengths)), corpus.doc_lengths,
+                lambda d, n_tok: n_tok * self.tree.bytes_per_token)
 
     # ---- event plumbing ---------------------------------------------------
 
@@ -279,6 +302,21 @@ class RAGSimulator:
         # SLO admission degrades by lowering retrieval depth; the real
         # engines honor the same override, so miss tokens stay identical
         k = min(r.top_k, self.cfg.top_k) if r.top_k > 0 else self.cfg.top_k
+        if self.cfg.mode == "cag":
+            # CAG: every doc's KV is already tree-resident, so there is no
+            # retrieval to overlap — resolve docs with ONE synchronous probe
+            # and submit the final (non-speculative) job at arrival
+            docs = tuple(int(d) for d in self.index.search(r.query_vec, k))
+            st.search_end = self.now
+            st.final_docs = docs
+            job = _Job(req=st, docs=docs, speculative=False)
+            st.queued_jobs.append(job)
+            plan_docs = [self.corpus.doc_lengths[i] for i in docs]
+            cached = self._cached_tokens(docs, plan_docs)
+            compute = sum(plan_docs) + len(r.question_tokens) - cached
+            self.sched.submit(job, cached, compute)
+            self._engine_maybe_start()
+            return
         st.stages = list(self.index.staged_search(
             r.query_vec, k, self.cfg.search_fraction))
         t = self.now
@@ -291,6 +329,7 @@ class RAGSimulator:
 
     def _on_stage(self, payload) -> None:
         st, stage = payload
+        self.retrieval_stages += 1
         docs = tuple(stage.topk)
         if stage.is_final:
             st.search_end = self.now
@@ -585,6 +624,7 @@ class RAGSimulator:
             prefill_iterations=len(self.prefill_batches),
             avg_prefill_batch=(float(np.mean(self.prefill_batches))
                                if self.prefill_batches else 0.0),
+            retrieval_stages=self.retrieval_stages,
             ttfts=list(map(float, ttfts)),
             disk_hit_ttfts=[float(st.ttft) for st in self._all_states
                             if st.ttft >= 0 and st.hit_tier_tokens[2] > 0],
@@ -643,6 +683,7 @@ def merge_sim_metrics(parts: Sequence[SimMetrics]) -> SimMetrics:
         prefill_iterations=sum(m.prefill_iterations for m in parts),
         avg_prefill_batch=_wmean(
             [(m.avg_prefill_batch, m.prefill_iterations) for m in parts]),
+        retrieval_stages=sum(m.retrieval_stages for m in parts),
         ttfts=list(map(float, ttfts)),
         disk_hit_ttfts=[t for m in parts for t in m.disk_hit_ttfts],
     )
@@ -666,8 +707,8 @@ def simulate_replicas(cfg: SimConfig, corpus: Corpus, index,
     """
     sims = [RAGSimulator(cfg, corpus, index, [], profiler=profiler)
             for _ in range(n_replicas)]
-    router = ReplicaRouter(sims, policy=routing,
-                           max_queue_skew=max_queue_skew)
+    router = ReplicaRouter(sims, config=FleetConfig(
+        replicas=len(sims), routing=routing, max_queue_skew=max_queue_skew))
     ordered = sorted(requests, key=lambda r: r.arrival)
     # in-flight window: each replica drains max_batch requests concurrently
     # while the trace keeps arriving, so backlog — what the escape hatch
@@ -724,8 +765,8 @@ def simulate_frontdoor(cfg: SimConfig, corpus: Corpus, index,
 
     sims = [RAGSimulator(cfg, corpus, index, [], profiler=profiler)
             for _ in range(n_replicas)]
-    router = ReplicaRouter(sims, policy=routing,
-                           max_queue_skew=max_queue_skew)
+    router = ReplicaRouter(sims, config=FleetConfig(
+        replicas=len(sims), routing=routing, max_queue_skew=max_queue_skew))
 
     def _k(r):
         return min(r.top_k, cfg.top_k) if r.top_k > 0 else cfg.top_k

@@ -1,0 +1,294 @@
+"""CAG (cache-augmented generation) workload mode: corpus preload
+accounting, the zero-retrieval-stage invariant, token bit-exactness vs the
+sequential oracle, CLI round-trips, sim/runtime doc-resolution identity,
+and the legacy-kwargs TypeError contract (docs/ARCHITECTURE.md §10, §12).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_reduced                       # noqa: E402
+from repro.core.knowledge_tree import (EvictionError,       # noqa: E402
+                                       KnowledgeTree)
+from repro.core.profiler import A10G_MISTRAL_7B             # noqa: E402
+from repro.kvcache.paged import DiskSegmentStore, PagedKVStore  # noqa: E402
+from repro.models import model as M                         # noqa: E402
+from repro.retrieval.corpus import (make_corpus,            # noqa: E402
+                                    make_workload)
+from repro.retrieval.vectordb import IVFIndex               # noqa: E402
+from repro.launch import serve                              # noqa: E402
+from repro.serving.config import (EngineConfig,             # noqa: E402
+                                  FleetConfig)
+from repro.serving.engine import RAGServer                  # noqa: E402
+from repro.serving.frontdoor import FrontDoor               # noqa: E402
+from repro.serving.router import ReplicaRouter              # noqa: E402
+from repro.serving.runtime import ContinuousRuntime         # noqa: E402
+from repro.serving.simulator import RAGSimulator, SimConfig  # noqa: E402
+
+KV_SHAPE = dict(n_layers=2, n_blocks=32, block_size=4, n_kv=2, head_dim=8)
+KV_BYTES = 2 * 2 * 2 * 8 * 4            # 2(k,v) * L * KV * hd * f32
+BIG_DISK = 256 * 2**20                  # plenty for every tiny corpus here
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen2-0.5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = make_corpus(10, mean_doc_tokens=12, vocab=cfg.vocab_size,
+                         seed=0)
+    idx = IVFIndex(corpus.doc_vectors, n_clusters=4, nprobe=4)
+    wl = make_workload(corpus, n_requests=5, rate=100.0, question_tokens=8,
+                       vocab=cfg.vocab_size, zipf_s=1.2, seed=1)
+    return cfg, params, corpus, idx, wl
+
+
+def _cag_config(**kw):
+    kw.setdefault("disk_cache_bytes", BIG_DISK)
+    return EngineConfig(mode="cag", top_k=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# preload accounting + bulk-insert contract
+# ---------------------------------------------------------------------------
+
+def test_preload_byte_and_file_accounting(setup, tmp_path):
+    """Startup preload inserts EVERY doc into the disk tier exactly once,
+    with byte/file accounting that matches the corpus and the mmap store."""
+    cfg, params, corpus, idx, _ = setup
+    srv = RAGServer(cfg, params, corpus, idx,
+                    config=_cag_config(disk_cache_dir=str(tmp_path)))
+    ps = srv.preload_stats
+    n_docs = len(corpus.doc_lengths)
+    assert ps["docs"] == ps["files"] == n_docs
+    assert ps["tokens"] == int(corpus.doc_lengths.sum())
+    assert ps["bytes"] == ps["tokens"] * srv.tree.bytes_per_token
+    # the tree billed exactly the preload (one spill per doc, nothing else)
+    assert srv.tree.stats["spill_bytes"] == ps["bytes"]
+    assert srv.disk.n_files == n_docs
+    # every corpus doc is a direct disk-resident child of the root
+    for d in range(n_docs):
+        node = srv.tree.root.children[d]
+        assert node.in_disk and not node.in_host and not node.in_gpu
+        assert node.spilled_once and not node.swapped_once
+    srv.tree.check_invariants()
+    # preloading again is a no-op (already resident)
+    again = srv.controller.preload_corpus(range(n_docs),
+                                          corpus.doc_lengths)
+    assert again["docs"] == 0 and again["bytes"] == 0
+
+
+def test_preload_disk_is_o1_and_overflows_loudly(tmp_path):
+    """Corpus-scale pre-insertion never runs the per-node eviction scan:
+    inserts go straight to the disk tier, and the first doc past the disk
+    budget fails with a loud EvictionError instead of evicting."""
+    from repro.serving.runtime import PagedBackend
+    store = PagedKVStore(**KV_SHAPE)
+    disk = DiskSegmentStore(str(tmp_path / "kv"), 100 * KV_BYTES)
+    tree = KnowledgeTree(10 * KV_BYTES, 10 * KV_BYTES, 3 * 10 * KV_BYTES,
+                         backend=PagedBackend(store, disk),
+                         bytes_per_token=KV_BYTES)
+
+    def payload(tokens, seed):
+        rng = np.random.default_rng(seed)
+        return {"k": rng.normal(size=(2, 1, tokens, 2, 8))
+                .astype(np.float32),
+                "v": rng.normal(size=(2, 1, tokens, 2, 8))
+                .astype(np.float32)}
+
+    for d in range(3):                       # exactly fills the disk tier
+        node, _ = tree.preload_disk(d, 10, payload(10, d))
+        assert node.in_disk and not node.in_host
+    tree.check_invariants()
+    assert tree.stats["gpu_evictions"] == 0
+    assert tree.stats["host_evictions"] == 0
+    assert tree.stats["disk_evictions"] == 0
+    with pytest.raises(EvictionError, match="corpus preload overflows"):
+        tree.preload_disk(3, 10, payload(10, 3))
+    # a preloaded doc still promotes through the normal cascade
+    node = tree.root.children[0]
+    tree.ensure_in_gpu([node])
+    assert node.in_gpu
+    tree.check_invariants()
+
+
+def test_preload_disk_requires_disk_tier():
+    tree = KnowledgeTree(10 * KV_BYTES, 10 * KV_BYTES, 0,
+                         bytes_per_token=KV_BYTES)
+    with pytest.raises(ValueError, match="requires a disk tier"):
+        tree.preload_disk(0, 10)
+
+
+def test_cag_engines_require_disk_budget(setup):
+    cfg, params, corpus, idx, _ = setup
+    with pytest.raises(ValueError, match="disk_cache_bytes > 0"):
+        RAGServer(cfg, params, corpus, idx,
+                  config=EngineConfig(mode="cag"))
+    with pytest.raises(ValueError, match="disk_cache_bytes > 0"):
+        ContinuousRuntime(cfg, params, corpus, idx,
+                          config=EngineConfig(mode="cag"))
+    with pytest.raises(ValueError, match="disk_cache_bytes > 0"):
+        SimConfig(profile=A10G_MISTRAL_7B, mode="cag")
+    with pytest.raises(ValueError, match="mode must be"):
+        EngineConfig(mode="kag")
+
+
+# ---------------------------------------------------------------------------
+# zero retrieval stages + token bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_runtime_cag_zero_retrieval_stages(setup):
+    """The scheduler invariant: in CAG mode no staged-search event ever
+    fires — docs resolve synchronously at arrival, no speculative prefill
+    is launched, and tokens match the sequential oracle bit for bit."""
+    cfg, params, corpus, idx, wl = setup
+    rt = ContinuousRuntime(cfg, params, corpus, idx, config=_cag_config())
+    res = rt.serve(wl, max_new_tokens=3)
+    s = rt.metrics.summary()
+    assert s["retrieval_stages"] == 0
+    assert s["speculative_prefills"] == 0
+    # every request was a full-context tier hit (the whole corpus is
+    # resident), so nothing was ever recomputed from scratch
+    assert all(r.alpha > 0 for r in res)
+    srv = RAGServer(cfg, params, corpus, idx, config=_cag_config())
+    seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
+    for a, b in zip(res, seq):
+        assert a.req_id == b.req_id and a.tokens == b.tokens
+    # RAG mode on the same workload DOES run stages (the counter counts)
+    rt_rag = ContinuousRuntime(cfg, params, corpus, idx,
+                               config=EngineConfig(top_k=2))
+    rt_rag.serve(wl, max_new_tokens=3)
+    assert rt_rag.metrics.summary()["retrieval_stages"] > 0
+
+
+def test_cag_matches_rag_tokens(setup):
+    """Mode changes residency and scheduling, never computation: CAG greedy
+    tokens equal RAG greedy tokens for the same workload."""
+    cfg, params, corpus, idx, wl = setup
+    cag = ContinuousRuntime(cfg, params, corpus, idx, config=_cag_config())
+    res_cag = cag.serve(wl, max_new_tokens=3)
+    rag = ContinuousRuntime(cfg, params, corpus, idx,
+                            config=EngineConfig(top_k=2))
+    res_rag = rag.serve(wl, max_new_tokens=3)
+    assert [r.tokens for r in res_cag] == [r.tokens for r in res_rag]
+    assert [r.docs for r in res_cag] == [r.docs for r in res_rag]
+
+
+# ---------------------------------------------------------------------------
+# CLI e2e (serve.main) at N=1 / N=3 / tp=2
+# ---------------------------------------------------------------------------
+
+TINY = ["--requests", "4", "--docs", "8", "--doc-tokens", "10",
+        "--top-k", "2", "--max-new-tokens", "2", "--rate", "100"]
+
+
+def _run_main(monkeypatch, capsys, extra):
+    monkeypatch.setattr("sys.argv", ["serve.py"] + TINY + extra)
+    serve.main()
+    return capsys.readouterr().out
+
+
+def test_main_cag_check_tokens(monkeypatch, capsys):
+    """--mode cag --check-tokens at N=1: the disk tier auto-sizes to the
+    corpus, the preload summary prints, and tokens stay bit-identical to
+    the sequential engine fed the same pre-resolved docs."""
+    out = _run_main(monkeypatch, capsys, ["--mode", "cag", "--check-tokens"])
+    assert "[cag] --disk-cache-bytes 0 -> auto-sized" in out
+    assert "[cag] preloaded 8 docs" in out
+    assert "token check: all 4 requests identical" in out
+
+
+def test_main_cag_check_tokens_three_replicas(monkeypatch, capsys):
+    """--mode cag --replicas 3: each replica preloads the full corpus, the
+    affinity router (homed by doc-set hash; overlap ties across replicas)
+    partitions the trace, and the fleet still matches the oracle exactly."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--mode", "cag", "--check-tokens", "--replicas", "3"])
+    assert "continuous x3 (affinity)" in out
+    assert "per replica x3" in out
+    assert "token check: all 4 requests identical" in out
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    jax.local_device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+           "set before jax import (CI multidevice lane)")
+def test_main_cag_check_tokens_tp2(monkeypatch, capsys):
+    """--mode cag --tp 2: preload computes doc KV on the pre-shard params
+    (single-device dense prefill), the sharded pool re-shards promoted
+    copies, and greedy tokens still match the unsharded oracle."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--mode", "cag", "--check-tokens", "--attn", "paged",
+                     "--tp", "2"])
+    assert "[cag] preloaded 8 docs" in out
+    assert "token check: all 4 requests identical" in out
+
+
+# ---------------------------------------------------------------------------
+# simulator: shared-policy identity with the runtime
+# ---------------------------------------------------------------------------
+
+def test_sim_cag_zero_stages_and_docs_match_runtime(setup):
+    """The analytic simulator shares the runtime's CAG policy exactly: zero
+    retrieval stages, every doc preloaded, and per-request doc resolution
+    identical to the real engine's (both are ONE synchronous index probe)."""
+    cfg, params, corpus, idx, wl = setup
+    corpus_bytes = (int(corpus.doc_lengths.sum())
+                    * int(A10G_MISTRAL_7B.kv_bytes_per_token))
+    sim = RAGSimulator(SimConfig(profile=A10G_MISTRAL_7B, top_k=2,
+                                 mode="cag",
+                                 disk_cache_bytes=corpus_bytes),
+                       corpus, idx, wl)
+    m = sim.run()
+    assert m.retrieval_stages == 0
+    assert sim.preload_stats["docs"] == len(corpus.doc_lengths)
+    assert m.completed == len(wl)
+    # every path's FIRST doc is disk-resident from the preload (deeper
+    # path nodes only materialise once a path is served), so the prefix
+    # hit rate is strictly positive from the very first request
+    assert m.doc_hit_rate > 0
+    rt = ContinuousRuntime(cfg, params, corpus, idx, config=_cag_config())
+    res = rt.serve(wl, max_new_tokens=1)
+    sim_docs = {st.r.req_id: st.final_docs for st in sim._all_states}
+    for r in res:
+        assert tuple(r.docs) == sim_docs[r.req_id]
+    # a RAG-mode sim of the same trace runs a positive number of stages
+    m_rag = RAGSimulator(SimConfig(profile=A10G_MISTRAL_7B, top_k=2),
+                         corpus, idx, wl).run()
+    assert m_rag.retrieval_stages > 0
+
+
+# ---------------------------------------------------------------------------
+# legacy-kwargs TypeError contract (api_redesign satellite)
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_raise_typeerror_naming_config_field(setup):
+    """The pre-PR 7 loose-kwargs constructor paths are DELETED: a stray
+    kwarg raises TypeError whose message names the EngineConfig/FleetConfig
+    field that replaced it (the migration hint, not a bare rejection)."""
+    cfg, params, corpus, idx, _ = setup
+    with pytest.raises(TypeError, match=r"EngineConfig\(\.\.\., top_k="):
+        RAGServer(cfg, params, corpus, idx, top_k=3)
+    with pytest.raises(TypeError,
+                       match=r"EngineConfig\(\.\.\., block_size="):
+        ContinuousRuntime(cfg, params, corpus, idx, block_size=8)
+    with pytest.raises(TypeError, match="no EngineConfig equivalent"):
+        ContinuousRuntime(cfg, params, corpus, idx, bogus_knob=1)
+    # renamed kwarg: the alias map points old 'policy' at the new field
+    with pytest.raises(TypeError, match=r"FleetConfig\(\.\.\., routing="):
+        ReplicaRouter([object()], policy="affinity")
+    with pytest.raises(TypeError,
+                       match=r"FleetConfig\(\.\.\., max_shadow_paths="):
+        ReplicaRouter([object()], max_shadow_paths=8)
+    with pytest.raises(TypeError, match="make_frontdoor"):
+        FrontDoor(None, None, capacity=8)
+
+
+def test_legacy_kwargs_rejected_before_any_engine_work():
+    """The TypeError fires before the constructor touches models/devices —
+    a migration error is cheap and instant even with junk positionals."""
+    with pytest.raises(TypeError, match="sole API"):
+        RAGServer(None, None, None, None, gpu_cache_bytes=0)
+    with pytest.raises(TypeError, match="sole API"):
+        ContinuousRuntime(None, None, None, None, speculative=False)

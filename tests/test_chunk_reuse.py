@@ -276,9 +276,9 @@ def setup():
 
 def _chunk_runtime(cfg, params, corpus, idx, **kw):
     kw.setdefault("recompute_tokens", 8)
-    return ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                             attn="paged", reuse="chunk", block_size=8,
-                             **kw)
+    econf = EngineConfig(top_k=2, attn="paged", reuse="chunk", block_size=8,
+                         **kw)
+    return ContinuousRuntime(cfg, params, corpus, idx, config=econf)
 
 
 def test_chunk_mode_exact_hits_bit_identical(setup):
@@ -305,7 +305,7 @@ def test_chunk_mode_exact_results_match_oracle(setup):
     rt = _chunk_runtime(cfg, params, corpus, idx)
     rt.serve(wl, max_new_tokens=3)
     res = sorted(rt.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
     assert any(a.exact for a in res)
     for a, b in zip(res, seq):
@@ -328,7 +328,7 @@ def test_relocated_chunks_tolerance_bounded(setup):
     assert rt.metrics.reloc_recompute_tokens > 0
     assert any(not r.exact for r in res)
     # oracle: full recompute over the SAME reversed doc order
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
     linfs = []
     for a, b in zip(res, seq):
@@ -357,7 +357,7 @@ def test_huge_recompute_budget_degenerates_to_exact(setup):
     res = sorted(rt.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
     assert rt.metrics.reloc_chunk_hits == 0
     assert all(r.exact for r in res)
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
     for a, b in zip(res, seq):
         assert a.tokens == b.tokens, (a.req_id, a.tokens, b.tokens)
@@ -379,8 +379,10 @@ def test_chunk_mode_block_accounting_balances(setup):
 def test_chunk_mode_requires_paged(setup):
     cfg, params, corpus, idx, _ = setup
     with pytest.raises(ValueError, match="requires the paged engine"):
-        ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                          attn="dense", reuse="chunk")
-    with pytest.raises(ValueError, match="unknown reuse mode"):
-        ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                          reuse="suffix")
+        ContinuousRuntime(cfg, params, corpus, idx,
+                          config=EngineConfig(top_k=2, attn="dense",
+                                              reuse="chunk"))
+    # the bad-mode check moved into EngineConfig itself: the config is now
+    # the sole front door, so it rejects the value before any engine exists
+    with pytest.raises(ValueError, match="reuse must be"):
+        EngineConfig(top_k=2, reuse="suffix")

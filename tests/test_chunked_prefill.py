@@ -205,9 +205,11 @@ def setup():
 
 
 def _runtime(setup, **kw):
+    from repro.serving.config import EngineConfig
     from repro.serving.runtime import ContinuousRuntime
     cfg, params, corpus, idx, _ = setup
-    return ContinuousRuntime(cfg, params, corpus, idx, top_k=2, **kw)
+    return ContinuousRuntime(cfg, params, corpus, idx,
+                             config=EngineConfig(top_k=2, **kw))
 
 
 def test_chunked_batched_tokens_match_sequential(setup):
@@ -215,7 +217,8 @@ def test_chunked_batched_tokens_match_sequential(setup):
     tokens are bit-identical to the (unchunked) sequential engine."""
     from repro.serving.engine import RAGServer
     cfg, params, corpus, idx, wl = setup
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    from repro.serving.config import EngineConfig
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = sorted(srv.serve(wl, max_new_tokens=3), key=lambda r: r.req_id)
     rt = _runtime(setup, prefill_chunk=6, max_prefill_tokens=18)
     res = rt.serve(wl, max_new_tokens=3)
@@ -321,7 +324,9 @@ def test_property_any_chunk_size_identical_tokens(setup):
     from hypothesis import given, settings, strategies as st_
     from repro.serving.engine import RAGServer
     cfg, params, corpus, idx, wl = setup
-    ref_srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    from repro.serving.config import EngineConfig
+    ref_srv = RAGServer(cfg, params, corpus, idx,
+                        config=EngineConfig(top_k=2))
     ref = sorted(ref_srv.serve(wl[:2], max_new_tokens=2),
                  key=lambda r: r.req_id)
     ref_tokens = [r.tokens for r in ref]
@@ -329,8 +334,8 @@ def test_property_any_chunk_size_identical_tokens(setup):
     @settings(max_examples=8, deadline=None)
     @given(chunk=st_.integers(min_value=1, max_value=40))
     def check(chunk):
-        srv = RAGServer(cfg, params, corpus, idx, top_k=2,
-                        prefill_chunk=chunk)
+        srv = RAGServer(cfg, params, corpus, idx,
+                        config=EngineConfig(top_k=2, prefill_chunk=chunk))
         out = sorted(srv.serve(wl[:2], max_new_tokens=2),
                      key=lambda r: r.req_id)
         assert [r.tokens for r in out] == ref_tokens

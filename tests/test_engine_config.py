@@ -49,14 +49,16 @@ def test_configs_are_frozen_and_validated():
                  max_batch=9, prefill_chunk=16, block_size=32, attn="paged",
                  disk_cache_bytes=4096, disk_cache_dir="/tmp/x",
                  search_time_scale=3.0, mesh=MeshConfig(tp=4)),
+    EngineConfig(mode="cag", disk_cache_bytes=1 << 20),
     FleetConfig(),
-    FleetConfig(replicas=3, routing="least_loaded", max_queue_skew=9),
+    FleetConfig(replicas=3, routing="least_loaded", max_queue_skew=9,
+                max_shadow_paths=128),
     FrontDoorConfig(),
     FrontDoorConfig(enabled=True, ttl=5.0, sim_threshold=0.5, capacity=7,
                     autoscale=True, autoscale_min=2, scale_up_backlog=3.0,
                     scale_down_backlog=1.0, cooldown=0.5, slo_ttft_ms=250.0),
-], ids=["engine-default", "engine-custom", "fleet-default", "fleet-custom",
-        "frontdoor-default", "frontdoor-custom"])
+], ids=["engine-default", "engine-custom", "engine-cag", "fleet-default",
+        "fleet-custom", "frontdoor-default", "frontdoor-custom"])
 def test_cli_round_trip(conf):
     """from_args(parse(to_cli())) is the identity for every config, so a
     config can be logged and re-run as plain flags."""
@@ -94,8 +96,12 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     @given(tp=st.integers(min_value=1, max_value=16),
            top_k=st.integers(min_value=1, max_value=8),
-           reorder=st.booleans(), spec=st.booleans())
-    def test_engine_config_cli_round_trip_prop(tp, top_k, reorder, spec):
+           reorder=st.booleans(), spec=st.booleans(),
+           mode=st.sampled_from(["rag", "cag"]),
+           disk=st.integers(min_value=1, max_value=1 << 24))
+    def test_engine_config_cli_round_trip_prop(tp, top_k, reorder, spec,
+                                               mode, disk):
         ec = EngineConfig(top_k=top_k, reorder=reorder, speculative=spec,
+                          mode=mode, disk_cache_bytes=disk,
                           mesh=MeshConfig(tp=tp))
         assert EngineConfig.from_args(_parse(ec.to_cli())) == ec

@@ -7,6 +7,7 @@ from repro.configs import get_reduced
 from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.vectordb import IVFIndex
+from repro.serving.config import EngineConfig
 from repro.serving.engine import RAGServer
 
 
@@ -22,7 +23,8 @@ def served():
 def test_cache_hit_reproduces_tokens(served):
     """The RAGCache guarantee: a cache-hit answer equals the cold answer."""
     cfg, params, corpus, idx = served
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2, reorder=False)
+    srv = RAGServer(cfg, params, corpus, idx,
+                    config=EngineConfig(top_k=2, reorder=False))
     wl = make_workload(corpus, n_requests=1, rate=10,
                        question_tokens=8, vocab=cfg.vocab_size, seed=1)
     cold = srv.serve([wl[0]], max_new_tokens=4)[0]
@@ -34,7 +36,7 @@ def test_cache_hit_reproduces_tokens(served):
 
 def test_hit_rate_grows_under_skew(served):
     cfg, params, corpus, idx = served
-    srv = RAGServer(cfg, params, corpus, idx, top_k=1)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=1))
     wl = make_workload(corpus, n_requests=8, rate=10, zipf_s=1.4,
                        question_tokens=8, vocab=cfg.vocab_size, seed=2)
     srv.serve(wl, max_new_tokens=1)
@@ -48,7 +50,8 @@ def test_ssm_state_caching_e2e():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     corpus = make_corpus(10, mean_doc_tokens=16, vocab=cfg.vocab_size, seed=0)
     idx = IVFIndex(corpus.doc_vectors, n_clusters=4, nprobe=4)
-    srv = RAGServer(cfg, params, corpus, idx, top_k=1, reorder=False)
+    srv = RAGServer(cfg, params, corpus, idx,
+                    config=EngineConfig(top_k=1, reorder=False))
     wl = make_workload(corpus, n_requests=1, rate=10, question_tokens=8,
                        vocab=cfg.vocab_size, seed=3)
     cold = srv.serve([wl[0]], max_new_tokens=3)[0]

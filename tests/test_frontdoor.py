@@ -59,7 +59,8 @@ def test_exact_hit_and_miss():
     c = QueryCache(capacity=4, ttl=10.0, sim_threshold=1.0)
     v, t = _vec(0), _toks(0)
     assert c.lookup(v, t, 0.0) == (MISS, None)
-    c.insert(v, t, docs=(3, 1), answer=[7, 8], source_req_id=0, now=0.0)
+    c.insert(v, t, docs=(3, 1), answer=[7, 8], source_req_id=0, now=0.0,
+             top_k=2)
     kind, e = c.lookup(v, t, 1.0)
     assert kind == HIT_EXACT
     assert e.docs == (3, 1) and e.answer == [7, 8] and e.source_req_id == 0
@@ -72,7 +73,8 @@ def test_exact_hit_and_miss():
 def test_similarity_hit_at_threshold_only():
     c = QueryCache(capacity=4, ttl=10.0, sim_threshold=0.95)
     v = _vec(0)
-    c.insert(v, _toks(0), docs=(1,), answer=[5], source_req_id=0, now=0.0)
+    c.insert(v, _toks(0), docs=(1,), answer=[5], source_req_id=0, now=0.0,
+             top_k=1)
     # near-duplicate: same direction, tiny perturbation, different tokens
     near = v + 0.01 * _vec(1)
     kind, e = c.lookup(near, _toks(1), 1.0)
@@ -85,21 +87,21 @@ def test_similarity_hit_at_threshold_only():
 def test_ttl_expiry_never_serves_expired():
     c = QueryCache(capacity=4, ttl=5.0, sim_threshold=0.9)
     v, t = _vec(0), _toks(0)
-    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0)
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0, top_k=1)
     assert c.lookup(v, t, 4.999)[0] == HIT_EXACT
     # ... the hit did NOT refresh freshness: expiry still anchors at t=0
     assert c.lookup(v, t, 5.0) == (MISS, None)
     assert c.stats()["expired"] == 1 and len(c) == 0
     # an expired entry is invisible to the similarity probe too
-    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=10.0)
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=10.0, top_k=1)
     assert c.lookup(v + 0.01 * _vec(1), _toks(1), 100.0) == (MISS, None)
 
 
 def test_reinsert_refreshes_freshness():
     c = QueryCache(capacity=4, ttl=5.0, sim_threshold=1.0)
     v, t = _vec(0), _toks(0)
-    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0)
-    c.insert(v, t, docs=(2,), answer=[9], source_req_id=7, now=4.0)
+    c.insert(v, t, docs=(1,), answer=[], source_req_id=0, now=0.0, top_k=1)
+    c.insert(v, t, docs=(2,), answer=[9], source_req_id=7, now=4.0, top_k=1)
     kind, e = c.lookup(v, t, 8.0)   # 8 < 4 + 5: alive, with the new payload
     assert kind == HIT_EXACT and e.docs == (2,) and e.source_req_id == 7
 
@@ -107,10 +109,10 @@ def test_reinsert_refreshes_freshness():
 def test_lru_capacity_bound_evicts_least_recently_hit():
     c = QueryCache(capacity=3, ttl=100.0, sim_threshold=1.0)
     for i in range(3):
-        c.insert(_vec(i), _toks(i), (i,), [], i, now=0.0)
+        c.insert(_vec(i), _toks(i), (i,), [], i, now=0.0, top_k=1)
     # touch entry 0 so it is most-recently used
     assert c.lookup(_vec(0), _toks(0), 1.0)[0] == HIT_EXACT
-    c.insert(_vec(3), _toks(3), (3,), [], 3, now=1.0)
+    c.insert(_vec(3), _toks(3), (3,), [], 3, now=1.0, top_k=1)
     assert len(c) == 3 and c.stats()["evicted"] == 1
     assert c.lookup(_vec(0), _toks(0), 2.0)[0] == HIT_EXACT   # survived
     assert c.lookup(_vec(1), _toks(1), 2.0)[0] == MISS        # evicted
@@ -552,7 +554,8 @@ if HAVE_HYPOTHESIS:
         now = 0.0
         for key, gap_i, gap_l in trace:
             now += gap_i
-            c.insert(_vec(key), _toks(key), (key,), [], key, now=now)
+            c.insert(_vec(key), _toks(key), (key,), [], key, now=now,
+                     top_k=1)
             created[key] = now
             now += gap_l
             probe = key % 3
@@ -573,7 +576,7 @@ if HAVE_HYPOTHESIS:
                                                         threshold):
         c = QueryCache(capacity=64, ttl=1e9, sim_threshold=threshold)
         for s in seeds:
-            c.insert(_vec(s), _toks(s), (s,), [], s, now=0.0)
+            c.insert(_vec(s), _toks(s), (s,), [], s, now=0.0, top_k=1)
         q = _vec(probe_seed)
         kind, e = c.lookup(q, _toks(probe_seed), 1.0)
         best = max(float(np.dot(_vec(s), q)) for s in seeds)
@@ -589,7 +592,7 @@ if HAVE_HYPOTHESIS:
     def test_lru_bound_never_exceeded(keys, capacity):
         c = QueryCache(capacity=capacity, ttl=1e9, sim_threshold=1.0)
         for i, k in enumerate(keys):
-            c.insert(_vec(k), _toks(k), (k,), [], i, now=float(i))
+            c.insert(_vec(k), _toks(k), (k,), [], i, now=float(i), top_k=1)
             assert len(c) <= capacity
         st_ = c.stats()
         assert st_["size"] <= capacity

@@ -315,7 +315,9 @@ def test_runtime_paged_tokens_match_dense_and_tables_pack_runs(serving_setup):
     from repro.serving.runtime import ContinuousRuntime
     cfg, params, corpus, idx, wl = serving_setup
     seen = {"midslot_tail": 0, "rows": 0}
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="paged")
+    from repro.serving.config import EngineConfig
+    rt = ContinuousRuntime(cfg, params, corpus, idx,
+                           config=EngineConfig(top_k=2, attn="paged"))
     orig = rt._paged_decode_args
 
     def spy(batch):
@@ -332,7 +334,8 @@ def test_runtime_paged_tokens_match_dense_and_tables_pack_runs(serving_setup):
 
     rt._paged_decode_args = spy
     res_p = rt.serve(wl, max_new_tokens=4)
-    rt_d = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="dense")
+    rt_d = ContinuousRuntime(cfg, params, corpus, idx,
+                             config=EngineConfig(top_k=2, attn="dense"))
     res_d = rt_d.serve(wl, max_new_tokens=4)
     assert [r.tokens for r in res_p] == [r.tokens for r in res_d]
     assert seen["rows"] > 0 and seen["midslot_tail"] > 0
@@ -348,8 +351,9 @@ def test_paged_step_never_materializes_dense_context(serving_setup):
     unchanged and are allowed.)"""
     cfg, params, corpus, idx, wl = serving_setup
     from repro.serving.runtime import ContinuousRuntime
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="paged",
-                           n_blocks=64)
+    from repro.serving.config import EngineConfig
+    rt = ContinuousRuntime(cfg, params, corpus, idx, n_blocks=64,
+                           config=EngineConfig(top_k=2, attn="paged"))
     rt.max_new_tokens = 4
     max_ctx = 2 * int(max(corpus.doc_lengths)) + 16
     n_slots = rt.store.pool.blocks_for_tokens(max_ctx) + 1

@@ -71,7 +71,9 @@ def test_unaligned_doc_is_shared_not_copied():
     idx = IVFIndex(corpus.doc_vectors, n_clusters=3, nprobe=3)
     wl = make_workload(corpus, n_requests=4, rate=100.0, question_tokens=8,
                        vocab=cfg.vocab_size, zipf_s=1.5, seed=2)
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=1, block_size=bs)
+    from repro.serving.config import EngineConfig
+    rt = ContinuousRuntime(cfg, params, corpus, idx,
+                           config=EngineConfig(top_k=1, block_size=bs))
     res = rt.serve(wl, max_new_tokens=2)
     assert len(res) == len(wl)
     # at least one request hit the tree and shared the unaligned doc

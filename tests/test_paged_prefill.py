@@ -446,8 +446,9 @@ def test_paged_prefill_never_materializes_dense_context(serving_setup):
     the pool planes threaded through unchanged are the one exemption."""
     cfg, params, corpus, idx, wl = serving_setup
     from repro.serving.runtime import ContinuousRuntime
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="paged",
-                           n_blocks=64)
+    from repro.serving.config import EngineConfig
+    rt = ContinuousRuntime(cfg, params, corpus, idx, n_blocks=64,
+                           config=EngineConfig(top_k=2, attn="paged"))
     rt.max_new_tokens = 4
     max_ctx = 2 * int(max(corpus.doc_lengths)) + 16
     n_slots = rt.store.pool.blocks_for_tokens(max_ctx) + 1
@@ -492,8 +493,10 @@ def test_runtime_paged_prefill_tokens_match_dense(serving_setup):
     from repro.serving.runtime import ContinuousRuntime
     cfg, params, corpus, idx, wl = serving_setup
     seen = {"rows": 0, "ragged": 0, "hit_runs": 0}
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="paged",
-                           prefill_chunk=6)
+    from repro.serving.config import EngineConfig
+    rt = ContinuousRuntime(cfg, params, corpus, idx,
+                           config=EngineConfig(top_k=2, attn="paged",
+                                               prefill_chunk=6))
     orig = rt._run_paged_rows
 
     def spy(rows):
@@ -507,8 +510,9 @@ def test_runtime_paged_prefill_tokens_match_dense(serving_setup):
 
     rt._run_paged_rows = spy
     res_p = rt.serve(wl, max_new_tokens=4)
-    rt_d = ContinuousRuntime(cfg, params, corpus, idx, top_k=2, attn="dense",
-                             prefill_chunk=6)
+    rt_d = ContinuousRuntime(cfg, params, corpus, idx,
+                             config=EngineConfig(top_k=2, attn="dense",
+                                                 prefill_chunk=6))
     res_d = rt_d.serve(wl, max_new_tokens=4)
     assert [r.tokens for r in res_p] == [r.tokens for r in res_d]
     assert seen["rows"] > 0

@@ -15,9 +15,14 @@ import dataclasses
 
 import pytest
 
+from repro.serving.config import FleetConfig
 from repro.serving.router import (AFFINITY, LEAST_LOADED, ROUND_ROBIN,
                                   ReplicaRouter, partition_requests,
                                   stable_doc_hash)
+
+
+def _fleet(n, **kw):
+    return FleetConfig(replicas=n, **kw)
 
 
 class _Bare:
@@ -37,8 +42,8 @@ def test_stable_hash_is_process_independent():
 
 
 def test_same_docs_stick_and_prefix_attracts():
-    r = ReplicaRouter([_Bare(), _Bare(), _Bare()], policy=AFFINITY,
-                      max_queue_skew=100)
+    r = ReplicaRouter([_Bare(), _Bare(), _Bare()],
+                      config=_fleet(3, routing=AFFINITY, max_queue_skew=100))
     first = r.route((1, 2), (10, 20))
     again = r.route((1, 2), (10, 20))
     assert again.index == first.index
@@ -50,14 +55,16 @@ def test_same_docs_stick_and_prefix_attracts():
 
 
 def test_round_robin_cycles_and_least_loaded_balances():
-    rr = ReplicaRouter([_Bare(), _Bare()], policy=ROUND_ROBIN)
+    rr = ReplicaRouter([_Bare(), _Bare()],
+                       config=_fleet(2, routing=ROUND_ROBIN))
     assert [rr.route((7,)).index for _ in range(4)] == [0, 1, 0, 1]
-    ll = ReplicaRouter([_Bare(), _Bare()], policy=LEAST_LOADED)
+    ll = ReplicaRouter([_Bare(), _Bare()],
+                       config=_fleet(2, routing=LEAST_LOADED))
     assert [ll.route((7,)).index for _ in range(4)] == [0, 1, 0, 1]
 
 
 def test_cold_empty_docs_go_least_loaded():
-    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY)
+    r = ReplicaRouter([_Bare(), _Bare()], config=_fleet(2, routing=AFFINITY))
     busy = r.route((9,), (4,)).index
     d = r.route((), ())
     assert d.kind == "cold"
@@ -65,7 +72,7 @@ def test_cold_empty_docs_go_least_loaded():
 
 
 def test_note_complete_guards_double_completion():
-    r = ReplicaRouter([_Bare()], policy=AFFINITY)
+    r = ReplicaRouter([_Bare()], config=_fleet(1, routing=AFFINITY))
     d = r.route((1,), (1,))
     r.note_complete(d.index)
     with pytest.raises(ValueError):
@@ -76,8 +83,9 @@ def test_shadow_ledger_is_bounded():
     """The shadow ledger is a bounded LRU of routed paths: old paths age
     out (bounded memory for long-running routers), fresh paths keep their
     affinity."""
-    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY,
-                      max_shadow_paths=8, max_queue_skew=10**9)
+    r = ReplicaRouter([_Bare(), _Bare()],
+                      config=_fleet(2, routing=AFFINITY, max_shadow_paths=8,
+                                    max_queue_skew=10**9))
     for i in range(100):
         r.route((i, i + 1), (1, 1))
 
@@ -90,7 +98,8 @@ def test_shadow_ledger_is_bounded():
 
 
 def test_partition_window_drains_depth():
-    r = ReplicaRouter([_Bare(), _Bare()], policy=AFFINITY, max_queue_skew=2)
+    r = ReplicaRouter([_Bare(), _Bare()],
+                      config=_fleet(2, routing=AFFINITY, max_queue_skew=2))
     reqs = [(i % 5,) for i in range(40)]
     shares = partition_requests(r, reqs, docs_of=lambda d: d, window=4)
     assert sum(len(s) for s in shares) == len(reqs)
@@ -125,7 +134,7 @@ class _Admitted:
 
 def test_admission_refusal_charges_nothing():
     replicas = [_Admitted(3), _Admitted(3)]
-    router = ReplicaRouter(replicas, policy=AFFINITY)
+    router = ReplicaRouter(replicas, config=_fleet(2, routing=AFFINITY))
     ok = router.route((1,), (1,), context_tokens=2)
     assert ok.admitted
     replicas[ok.index].admission.used = 2
@@ -154,7 +163,7 @@ def test_admission_derives_beta_from_replica_tree():
             self.tree = _Tree(cached)
 
     warm, cold = _Replica(10, cached=90), _Replica(10, cached=0)
-    router = ReplicaRouter([cold, warm], policy=AFFINITY)
+    router = ReplicaRouter([cold, warm], config=_fleet(2, routing=AFFINITY))
     # ctx=100: cold needs beta=100 > 10 (refuse); warm needs 10 (admit)
     d = router.route((1,), (100,), context_tokens=100)
     assert d.admitted and d.replica is warm
@@ -182,8 +191,9 @@ if HAVE_HYPOTHESIS:
         """With the escape hatch effectively off, routing is a
         deterministic sticky assignment: every occurrence of a doc-set
         lands on the replica its first occurrence chose."""
-        router = ReplicaRouter([_Bare() for _ in range(n)], policy=AFFINITY,
-                               max_queue_skew=10**9)
+        router = ReplicaRouter(
+            [_Bare() for _ in range(n)],
+            config=_fleet(n, routing=AFFINITY, max_queue_skew=10**9))
         where = {}
         for docs in trace:
             d = router.route(docs, tuple(1 for _ in docs))
@@ -200,8 +210,9 @@ if HAVE_HYPOTHESIS:
         exceeds the bound; interleaving completions, no single dispatch
         ever pushes its target more than the bound above the least-loaded
         replica."""
-        router = ReplicaRouter([_Bare() for _ in range(n)], policy=AFFINITY,
-                               max_queue_skew=skew)
+        router = ReplicaRouter(
+            [_Bare() for _ in range(n)],
+            config=_fleet(n, routing=AFFINITY, max_queue_skew=skew))
         in_flight = []
         drain = iter(completes)
         for docs in trace:
@@ -228,8 +239,9 @@ if HAVE_HYPOTHESIS:
         when no replica can admit, the decision comes back admitted=False
         and charges nothing.  (Treeless replicas: beta == context.)"""
         replicas = [_Admitted(budget) for _ in range(n)]
-        router = ReplicaRouter(replicas, policy=AFFINITY,
-                               max_queue_skew=10**9)
+        router = ReplicaRouter(
+            replicas,
+            config=_fleet(n, routing=AFFINITY, max_queue_skew=10**9))
         in_flight = []             # (replica index, beta) of admitted jobs
         drain = iter(completes)
         for docs, beta in trace:
@@ -278,9 +290,12 @@ def tiny_setup():
 def _serve_fleet(tiny_setup, n):
     from repro.serving.runtime import ContinuousRuntime
     cfg, params, corpus, idx, wl = tiny_setup
-    rts = [ContinuousRuntime(cfg, params, corpus, idx, top_k=2)
+    from repro.serving.config import EngineConfig
+    rts = [ContinuousRuntime(cfg, params, corpus, idx,
+                             config=EngineConfig(top_k=2))
            for _ in range(n)]
-    router = ReplicaRouter(rts, policy=AFFINITY, max_queue_skew=4)
+    router = ReplicaRouter(rts, config=_fleet(n, routing=AFFINITY,
+                                              max_queue_skew=4))
     shares = partition_requests(
         router, wl, docs_of=lambda r: idx.search(r.query_vec, 2),
         doc_tokens_of=lambda ds: [int(corpus.doc_lengths[d]) for d in ds],

@@ -11,6 +11,7 @@ from repro.configs import get_reduced
 from repro.models import model as M
 from repro.retrieval.corpus import make_corpus, make_workload
 from repro.retrieval.vectordb import IVFIndex
+from repro.serving.config import EngineConfig
 from repro.serving.engine import RAGServer
 from repro.serving.runtime import ContinuousRuntime
 
@@ -29,7 +30,8 @@ def setup():
 @pytest.fixture(scope="module")
 def continuous_run(setup):
     cfg, params, corpus, idx, wl = setup
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2)
+    rt = ContinuousRuntime(cfg, params, corpus, idx,
+                           config=EngineConfig(top_k=2))
     res = rt.serve(wl, max_new_tokens=4)
     return rt, res
 
@@ -39,7 +41,7 @@ def test_tokens_match_sequential_engine(setup, continuous_run):
     is a pure scheduling change — greedy tokens are bit-identical."""
     cfg, params, corpus, idx, wl = setup
     _, res = continuous_run
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2)
+    srv = RAGServer(cfg, params, corpus, idx, config=EngineConfig(top_k=2))
     seq = sorted(srv.serve(wl, max_new_tokens=4), key=lambda r: r.req_id)
     assert len(res) == len(seq) == len(wl)
     for a, b in zip(res, seq):
@@ -85,7 +87,8 @@ def test_paged_cache_hits_reduce_beta(setup):
     """Serving the same workload twice on one runtime: second pass hits the
     tree (alpha > 0) and still produces identical tokens."""
     cfg, params, corpus, idx, wl = setup
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2)
+    rt = ContinuousRuntime(cfg, params, corpus, idx,
+                           config=EngineConfig(top_k=2))
     one = rt.serve([wl[0]], max_new_tokens=4)
     two = rt.serve([wl[0]], max_new_tokens=4)
     assert one[0].alpha == 0 and two[0].alpha > 0
@@ -98,8 +101,8 @@ def test_admission_pressure_and_preemption_complete_all(setup):
     preemptions but every request must still complete with correct-length
     outputs and balanced accounting."""
     cfg, params, corpus, idx, wl = setup
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                           n_blocks=40, block_size=8)
+    rt = ContinuousRuntime(cfg, params, corpus, idx, n_blocks=40,
+                           config=EngineConfig(top_k=2, block_size=8))
     res = rt.serve(wl, max_new_tokens=3)
     assert len(res) == len(wl)
     for r in res:
@@ -125,8 +128,8 @@ def test_block_sharing_when_aligned(setup):
     idx2 = IVFIndex(corpus2.doc_vectors, n_clusters=4, nprobe=4)
     wl2 = make_workload(corpus2, n_requests=4, rate=100.0, question_tokens=8,
                         vocab=cfg.vocab_size, zipf_s=1.4, seed=2)
-    rt = ContinuousRuntime(cfg, params, corpus2, idx2, top_k=1,
-                           block_size=16)
+    rt = ContinuousRuntime(cfg, params, corpus2, idx2,
+                           config=EngineConfig(top_k=1, block_size=16))
     rt.serve(wl2, max_new_tokens=3)
     assert rt.metrics.blocks_shared > 0
     rt.store.pool.check()
@@ -136,8 +139,8 @@ def test_unserviceable_pool_fails_loudly(setup):
     """A pool that cannot hold even one worst-case request must raise at
     serve() time instead of silently returning empty tokens."""
     cfg, params, corpus, idx, wl = setup
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                           n_blocks=4, block_size=8)
+    rt = ContinuousRuntime(cfg, params, corpus, idx, n_blocks=4,
+                           config=EngineConfig(top_k=2, block_size=8))
     with pytest.raises(ValueError, match="paged pool too small"):
         rt.serve(wl[:2], max_new_tokens=2)
 

@@ -281,13 +281,14 @@ def test_runtime_disk_tier_tokens_identical(tmp_path, max_new):
     idx = IVFIndex(corpus.doc_vectors, n_clusters=4, nprobe=4)
     wl = make_workload(corpus, n_requests=6, rate=100.0, question_tokens=8,
                        vocab=cfg.vocab_size, zipf_s=1.2, seed=1)
-    budgets = dict(gpu_cache_bytes=112 * 1024, host_cache_bytes=32 * 1024,
-                   disk_cache_bytes=2 * 2**20)
-    rt = ContinuousRuntime(cfg, params, corpus, idx, top_k=2,
-                           disk_cache_dir=str(tmp_path), **budgets)
+    from repro.serving.config import EngineConfig
+    econf = EngineConfig(gpu_cache_bytes=112 * 1024,
+                         host_cache_bytes=32 * 1024,
+                         disk_cache_bytes=2 * 2**20,
+                         disk_cache_dir=str(tmp_path), top_k=2)
+    rt = ContinuousRuntime(cfg, params, corpus, idx, config=econf)
     res = rt.serve(wl, max_new_tokens=max_new)
-    srv = RAGServer(cfg, params, corpus, idx, top_k=2,
-                    disk_cache_dir=str(tmp_path), **budgets)
+    srv = RAGServer(cfg, params, corpus, idx, config=econf)
     seq = sorted(srv.serve(wl, max_new_tokens=max_new), key=lambda r: r.req_id)
     for a, b in zip(res, seq):
         assert a.req_id == b.req_id and a.tokens == b.tokens
